@@ -1,0 +1,39 @@
+"""Figure 4 — achieved FLOP/s ratio and aggregate FLOP/s vs worker count
+for the GPT-3 family under the analytic plan-search cost model."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core import costmodel
+from repro.core.costmodel import A800, TPU_V5E, TaskModel
+
+SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+
+
+def run() -> list:
+    rows = []
+    for hw in (A800, TPU_V5E):
+        for size in SIZES:
+            t = TaskModel.from_arch(get_arch(size), seq_len=2048,
+                                    global_batch=256)
+            for x in range(8, 129, 8):
+                plan = costmodel.best_plan(t, x, hw)
+                rows.append({
+                    "hw": hw.name, "model": size, "workers": x,
+                    "agg_tflops": (plan.agg_flops / 1e12) if plan else 0.0,
+                    "ratio": costmodel.flops_ratio(t, x, hw),
+                    "dp": plan.dp if plan else 0,
+                    "tp": plan.tp if plan else 0,
+                    "pp": plan.pp if plan else 0,
+                })
+    emit(rows, "costmodel",
+         ["hw", "model", "workers", "agg_tflops", "ratio", "dp", "tp", "pp"])
+    # sanity: report the non-monotonic dips (the Fig. 4 phenomenon)
+    dips = 0
+    for size in SIZES:
+        series = [r for r in rows if r["model"] == size and r["hw"] == "A800"]
+        for a, b in zip(series, series[1:]):
+            if b["ratio"] < a["ratio"] - 1e-9:
+                dips += 1
+    print(f"non-monotonic ratio dips (A800): {dips}")
+    return rows

@@ -1,0 +1,73 @@
+"""Roofline table (deliverable g): reads the dry-run sweep results
+(results/dryrun.jsonl) and reports, per (arch x shape x mesh):
+
+  compute_s    = HLO_FLOPs / peak            (per-chip module)
+  memory_s     = HLO_bytes / HBM_bw
+  collective_s = collective_bytes / link_bw
+  bottleneck   = argmax of the three
+  mfr          = MODEL_FLOPS / (HLO_FLOPs x chips) — useful-compute ratio
+
+Single-pod rows are the canonical roofline table; multi-pod rows prove
+the pod axis shards.  Run the sweep first:
+    python -m repro.launch.sweep --out results/dryrun.jsonl [--multi-pod]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+DRYRUN = os.path.join(RESULTS_DIR, "dryrun.jsonl")
+
+
+def load(path: str = DRYRUN, variant: str = "baseline"):
+    rows = []
+    if not os.path.exists(path):
+        print(f"(no {path}; run repro.launch.sweep first)")
+        return rows
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("variant", "baseline") != variant:
+                continue
+            seen[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def run(variant: str = "baseline") -> list:
+    rows = []
+    for r in load(variant=variant):
+        if r.get("status") == "skip":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "bottleneck": "SKIP",
+                         "note": r["reason"][:44]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "bottleneck": r.get("status"),
+                         "note": ""})
+            continue
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        bottleneck = max(terms, key=terms.get)
+        total = sum(terms.values())
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": bottleneck,
+            "dominant_frac": terms[bottleneck] / total if total else 0.0,
+            "mfr": r.get("model_flops_ratio", 0.0),
+            "note": "",
+        })
+    rows.sort(key=lambda r: (r["mesh"], r["shape"], r["arch"]))
+    emit(rows, f"roofline_{variant}",
+         ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+          "bottleneck", "dominant_frac", "mfr", "note"])
+    return rows

@@ -1,0 +1,47 @@
+"""Figure 9 — transition time after a SEV1 failure, GPT-3 7B, varying
+cluster size, Unicron vs the four baselines."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core import transition
+from repro.core.detection import ErrorKind, detection_time
+
+STATE_BYTES = 16.0 * get_arch("gpt3-7b").param_count()
+AVG_ITER_S = 30.0
+CLUSTERS = [16, 32, 64, 128]
+
+
+def run() -> list:
+    rows = []
+    for n in CLUSTERS:
+        dp = max(n // 16, 1)           # plausible DP degree at this size
+        det_uni = detection_time(ErrorKind.LOST_CONNECTION, AVG_ITER_S)
+        det_base = detection_time(ErrorKind.LOST_CONNECTION, AVG_ITER_S,
+                                  unicron=False)
+        uni = transition.estimate_unicron(
+            STATE_BYTES, AVG_ITER_S, dp_degree=dp, detect_s=det_uni)
+        oob = transition.estimate_baseline(
+            STATE_BYTES, det_base, dynamic_reconfig=True, ckpt_restart=False)
+        bam = transition.estimate_baseline(
+            STATE_BYTES, det_base, dynamic_reconfig=True, ckpt_restart=False)
+        meg = transition.estimate_baseline(
+            STATE_BYTES, det_base, dynamic_reconfig=False, ckpt_restart=True)
+        var = transition.estimate_baseline(
+            STATE_BYTES, det_base, dynamic_reconfig=False, ckpt_restart=True)
+        rows.append({
+            "gpus": n,
+            "unicron_s": uni.total,
+            "oobleck_s": oob.total,
+            "bamboo_s": bam.total,
+            "megatron_s": meg.total,
+            "varuna_s": var.total,
+            "unicron_detect_s": uni.detect_s,
+            "unicron_migrate_s": uni.migrate_s,
+            "unicron_recompute_s": uni.recompute_s,
+        })
+    emit(rows, "transition",
+         ["gpus", "unicron_s", "oobleck_s", "bamboo_s", "megatron_s",
+          "varuna_s", "unicron_detect_s", "unicron_migrate_s",
+          "unicron_recompute_s"])
+    return rows

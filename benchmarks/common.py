@@ -1,0 +1,52 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def emit(rows: List[Dict], name: str, columns: List[str]) -> None:
+    """Print a CSV block and persist JSON under results/."""
+    print(f"\n== {name} ==")
+    print(",".join(columns))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in columns))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def case5_tasks():
+    """Table 3 Case #5: the workload of the Fig. 11 trace experiments."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import TaskModel
+    from repro.core.waf import Task
+    sizes = ["gpt3-1.3b"] * 3 + ["gpt3-7b"] * 2 + ["gpt3-13b"]
+    weights = [2.0, 1.7, 1.4, 1.1, 0.8, 0.5]
+    tasks = [Task(model=TaskModel.from_arch(get_arch(s), global_batch=128),
+                  weight=w) for s, w in zip(sizes, weights)]
+    assignment = [16, 16, 16, 24, 24, 32]
+    return tasks, assignment

@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run detection  # one
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = ["detection", "costmodel", "transition", "throughput",
+           "waf_multitask", "traces", "ablation", "roofline"]
+
+
+def main() -> None:
+    names = sys.argv[1:] or BENCHES
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+            print(f"[bench_{name}: ok, {time.perf_counter() - t0:.1f}s]")
+        except Exception as e:                          # noqa: BLE001
+            failures.append(name)
+            print(f"[bench_{name}: FAILED — {e!r}]")
+    if failures:
+        sys.exit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

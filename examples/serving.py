@@ -1,0 +1,65 @@
+"""Batched serving example: prefill + decode with the KV/state cache.
+
+Part 1 serves batched requests through the static RequestBatcher for a
+dense-GQA arch and the attention-free SSM arch (O(1) decode state — the
+long_500k path).  Part 2 runs the vLLM-style continuous batcher: six
+requests of different lengths share two lanes, joining and leaving
+mid-flight (per-lane decode positions).
+
+    PYTHONPATH=src python examples/serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.serve.decode import RequestBatcher, generate
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    for arch in ("qwen3-4b", "mamba2-780m"):
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        data = SyntheticLM(cfg, seq_len=16, global_batch=4)
+        prompts = [data.batch(0)["tokens"][i] for i in range(3)]
+
+        batcher = RequestBatcher(model, params, batch_size=4, capacity=64)
+        t0 = time.time()
+        outs = batcher.serve(prompts, n_new=12)
+        dt = time.time() - t0
+        print(f"{arch}: served {len(outs)} requests, 12 new tokens each "
+              f"({dt:.1f}s incl. compile)")
+        for i, o in enumerate(outs):
+            print(f"  req{i}: {o.tolist()}")
+        # greedy decode is deterministic
+        again = batcher.serve(prompts, n_new=12)
+        assert all(jnp.array_equal(a, b) for a, b in zip(outs, again))
+        print(f"  deterministic: yes")
+
+    # ---- continuous batching: 6 requests over 2 lanes --------------------
+    cfg = get_arch("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, params, batch_size=2, capacity=48)
+    key = jax.random.PRNGKey(11)
+    for i in range(6):
+        plen = 4 + 2 * (i % 3)
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,), 0,
+                                    cfg.vocab)
+        cb.submit(Request(req_id=i, prompt=prompt, max_new=5 + i))
+    t0 = time.time()
+    done = cb.run()
+    print(f"\ncontinuous batching: {len(done)} requests over 2 lanes in "
+          f"{cb.steps} fused steps ({time.time() - t0:.1f}s)")
+    for r in sorted(done, key=lambda r: r.req_id):
+        print(f"  req{r.req_id} ({r.prompt.shape[0]} prompt toks -> "
+              f"{len(r.out)} new): {r.out}")
+
+
+if __name__ == "__main__":
+    main()

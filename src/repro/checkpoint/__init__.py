@@ -1,0 +1,5 @@
+from repro.checkpoint import persistent
+from repro.checkpoint.inmemory import InMemoryStore
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["persistent", "InMemoryStore", "CheckpointManager"]

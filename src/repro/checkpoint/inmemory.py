@@ -1,0 +1,63 @@
+"""GEMINI-style in-memory checkpointing [SOSP'23, ref 49 in the paper].
+
+Each agent keeps the latest training state snapshot in host CPU RAM and
+*replicates it to a neighbor host* (ring placement), so that when a node
+fails, its state is recoverable from the neighbor's RAM instead of remote
+storage.  Unicron's agent manages this store and asynchronously spools
+snapshots to the persistent tier (checkpoint.persistent).
+
+This module implements the functional store; the cluster simulator charges
+the paper-calibrated bandwidths for each tier.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _snapshot(tree: Any) -> Any:
+    """Copy a pytree to host memory (numpy)."""
+    return jax.tree.map(lambda x: np.array(x), tree)
+
+
+class InMemoryStore:
+    """Ring-replicated host-RAM checkpoint store.
+
+    Keyed by (task_id, rank).  ``put`` stores the snapshot locally and on
+    the ring neighbor; ``get`` implements the recovery preference:
+    local copy -> neighbor replica.
+    """
+
+    def __init__(self, n_ranks: int):
+        self.n_ranks = n_ranks
+        self._local: Dict[Tuple[str, int], Tuple[int, Any]] = {}
+        self._replica: Dict[Tuple[str, int], Tuple[int, Any]] = {}
+
+    def neighbor(self, rank: int) -> int:
+        return (rank + 1) % self.n_ranks
+
+    def put(self, task: str, rank: int, step: int, tree: Any) -> None:
+        snap = _snapshot(tree)
+        self._local[(task, rank)] = (step, snap)
+        self._replica[(task, self.neighbor(rank))] = (step, snap)
+
+    def drop_rank(self, task: str, rank: int) -> None:
+        """Simulate host loss: local copy and any replica *held on* the
+        failed host vanish."""
+        self._local.pop((task, rank), None)
+        self._replica.pop((task, rank), None)
+
+    def get(self, task: str, rank: int) -> Optional[Tuple[int, Any, str]]:
+        """Returns (step, snapshot, source) or None."""
+        if (task, rank) in self._local:
+            s, t = self._local[(task, rank)]
+            return s, t, "inmemory_local"
+        if (task, self.neighbor(rank)) in self._replica:
+            s, t = self._replica[(task, self.neighbor(rank))]
+            return s, t, "inmemory_replica"
+        return None
+
+    def available(self, task: str, rank: int) -> bool:
+        return self.get(task, rank) is not None

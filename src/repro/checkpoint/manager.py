@@ -1,0 +1,64 @@
+"""Hierarchical checkpoint manager — the *nearest principle* (§6.3).
+
+Recovery preference order when a task needs state:
+
+  1. **DP replica** — a healthy data-parallel peer already holds the full
+     parameter/optimizer state; replicate over the interconnect.
+  2. **In-memory checkpoint** — GEMINI-style host-RAM snapshot (local or
+     ring neighbor).
+  3. **Persistent checkpoint** — remote cloud filesystem, slowest tier.
+
+``restore`` returns (state, source) so callers (and the simulator, which
+charges per-tier costs) know which tier satisfied the request.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Optional, Tuple
+
+from repro.checkpoint import inmemory, persistent
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, n_ranks: int,
+                 persist_every: int = 10):
+        self.directory = directory
+        self.store = inmemory.InMemoryStore(n_ranks)
+        self.persist_every = persist_every
+        self.task = "task"
+
+    # ---- save path -------------------------------------------------------
+
+    def save(self, rank: int, step: int, state: Any) -> None:
+        """In-memory snapshot every call; async spool to persistent tier
+        every ``persist_every`` steps (synchronous here; the simulator
+        models the asynchrony)."""
+        self.store.put(self.task, rank, step, state)
+        if step % self.persist_every == 0:
+            persistent.save(self.directory, step, state)
+
+    # ---- restore path (nearest principle) ---------------------------------
+
+    def restore(self, rank: int, like: Any,
+                dp_peer_state: Optional[Any] = None,
+                peer_step: Optional[int] = None) -> Tuple[Any, int, str]:
+        """Returns (state, step, source).
+
+        ``dp_peer_state`` is the live state of a healthy DP replica if one
+        exists — the nearest source (the caller knows its peers; Unicron's
+        coordinator passes it when replication is possible).
+        """
+        if dp_peer_state is not None:
+            return dp_peer_state, int(peer_step or 0), "dp_replica"
+        hit = self.store.get(self.task, rank)
+        if hit is not None:
+            step, snap, src = hit
+            return snap, step, src
+        step = persistent.latest_step(self.directory)
+        if step is not None:
+            return persistent.restore(self.directory, like, step), step, \
+                "persistent"
+        raise FileNotFoundError("no recovery source available")
+
+    def drop_rank(self, rank: int) -> None:
+        self.store.drop_rank(self.task, rank)

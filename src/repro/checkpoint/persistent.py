@@ -1,0 +1,69 @@
+"""Persistent (remote-storage) checkpointing.
+
+Pytrees are flattened to path-keyed npz archives.  In the paper's setting
+this is the cloud filesystem tier (20 GB/s); the simulator charges that
+bandwidth, while this module provides the real functional store used by
+examples and tests.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    with open(os.path.join(directory, "latest"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    marker = os.path.join(directory, "latest")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = jax.tree_util.keystr(p)
+        arr = data[key]
+        new_leaves.append(np.asarray(arr).astype(leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(_treedef_of(like), new_leaves)
+
+
+def checkpoint_nbytes(tree: Any) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))

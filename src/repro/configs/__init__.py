@@ -1,0 +1,32 @@
+"""Config registry: the 10 assigned architectures + the paper's GPT-3 family."""
+from repro.configs.base import (ArchConfig, AttnConfig, MLAConfig, MoEConfig,
+                                SHAPES, SSMConfig, ShapeConfig, get_arch,
+                                list_archs, register, supports_shape)
+
+# Import order defines registry order.
+from repro.configs.qwen3_4b import ARCH as QWEN3_4B
+from repro.configs.zamba2_1p2b import ARCH as ZAMBA2_1P2B
+from repro.configs.gemma3_12b import ARCH as GEMMA3_12B
+from repro.configs.deepseek_v3_671b import ARCH as DEEPSEEK_V3_671B
+from repro.configs.granite_moe_3b import ARCH as GRANITE_MOE_3B
+from repro.configs.mamba2_780m import ARCH as MAMBA2_780M
+from repro.configs.internvl2_2b import ARCH as INTERNVL2_2B
+from repro.configs.gemma_2b import ARCH as GEMMA_2B
+from repro.configs.hubert_xlarge import ARCH as HUBERT_XLARGE
+from repro.configs.granite_3_8b import ARCH as GRANITE_3_8B
+from repro.configs import gpt3  # noqa: F401  (registers GPT-3 family)
+
+ASSIGNED_ARCHS = [
+    "qwen3-4b", "zamba2-1.2b", "gemma3-12b", "deepseek-v3-671b",
+    "granite-moe-3b-a800m", "mamba2-780m", "internvl2-2b", "gemma-2b",
+    "hubert-xlarge", "granite-3-8b",
+]
+
+ALL_ARCHS = ASSIGNED_ARCHS + list(gpt3.GPT3_SIZES and [
+    "gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b", "gpt3-175b"])
+
+__all__ = [
+    "ArchConfig", "AttnConfig", "MLAConfig", "MoEConfig", "SSMConfig",
+    "ShapeConfig", "SHAPES", "get_arch", "list_archs", "register",
+    "supports_shape", "ASSIGNED_ARCHS", "ALL_ARCHS",
+]

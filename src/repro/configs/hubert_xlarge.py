@@ -1,0 +1,25 @@
+"""hubert-xlarge [audio] — encoder-only, wav2vec2 architecture.
+[arXiv:2106.07447]
+
+The conv feature extractor (waveform -> 50Hz frames) is a STUB per the
+assignment carve-out: ``input_specs()`` supplies precomputed frame
+embeddings (batch, seq, d_model).  Training objective is masked-unit
+prediction over the 504 cluster-code vocabulary.  Encoder-only => no
+decode shapes (noted in DESIGN.md).
+"""
+from repro.configs.base import ArchConfig, AttnConfig, register
+
+ARCH = register(ArchConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    source="arXiv:2106.07447",
+    n_layers=48,
+    d_model=1280,
+    d_ff=5120,
+    vocab=504,
+    attn=AttnConfig(n_heads=16, n_kv_heads=16, head_dim=80, causal=False),
+    encoder_only=True,
+    modality="audio_stub",
+    mlp_act="gelu",
+    norm="layernorm",
+))

@@ -1,0 +1,77 @@
+"""Unicron agent (§3.1) — one per machine.
+
+Responsibilities: (i) persistent heartbeat to the coordinator through the
+status monitor (node health detection), (ii) one monitoring thread per GPU
+(process supervision + exception propagation), (iii) executing recovery
+actions, (iv) managing the GEMINI-style in-memory checkpoint tier.
+
+In this reproduction the agent's timing behavior runs inside the
+discrete-event simulator; its *state machine* is the real code below.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.detection import (ErrorKind, Method, OnlineStatMonitor,
+                                  classify, detection_time)
+from repro.core.kvstore import KVStore
+
+HEARTBEAT_INTERVAL_S = 2.0
+HEARTBEAT_TTL_S = 6.0
+
+
+@dataclass
+class GPUMonitor:
+    """Dedicated CPU monitoring thread for one GPU (§3.1)."""
+    gpu_id: int
+    healthy: bool = True
+    last_exception: Optional[ErrorKind] = None
+
+    def observe_exception(self, kind: ErrorKind) -> ErrorKind:
+        self.last_exception = kind
+        self.healthy = False
+        return kind
+
+
+class UnicronAgent:
+    def __init__(self, node_id: int, kv: KVStore, n_gpus: int = 8):
+        self.node_id = node_id
+        self.kv = kv
+        self.monitors = [GPUMonitor(g) for g in range(n_gpus)]
+        self.stat_monitor = OnlineStatMonitor()
+        self.alive = True
+
+    # ---- heartbeat / node health -------------------------------------------
+
+    def heartbeat(self, now: float) -> None:
+        if self.alive:
+            self.kv.put(f"/nodes/{self.node_id}/alive", now,
+                        ttl=HEARTBEAT_TTL_S, now=now)
+
+    def kill(self) -> None:
+        """Simulated node loss: heartbeats stop; the coordinator's lease
+        expiry raises LOST_CONNECTION."""
+        self.alive = False
+
+    # ---- in-band error reporting ---------------------------------------
+
+    def report(self, kind: ErrorKind, now: float,
+               avg_iter_s: float = 30.0) -> Dict:
+        """Detect + publish an error to the status monitor.  Returns the
+        record including when the coordinator will see it."""
+        method, sev = classify(kind)
+        latency = detection_time(kind, avg_iter_s, unicron=True)
+        record = {"node": self.node_id, "kind": kind.value,
+                  "severity": int(sev), "method": method.value,
+                  "raised_at": now, "visible_at": now + latency}
+        self.kv.put(f"/errors/{self.node_id}/{now:.3f}", record, now=now)
+        return record
+
+    # ---- iteration statistics (online statistical monitoring) -----------
+
+    def observe_iteration(self, seconds: float) -> None:
+        self.stat_monitor.observe(seconds)
+
+    def check_progress(self, waited_s: float) -> str:
+        return self.stat_monitor.status(waited_s)

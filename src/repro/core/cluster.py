@@ -1,0 +1,74 @@
+"""Cluster state: nodes, GPU workers, task placements."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+
+@dataclass
+class Node:
+    node_id: int
+    n_gpus: int = 8
+    healthy: bool = True
+    repair_done_at: Optional[float] = None   # when a failed node returns
+
+
+class Cluster:
+    def __init__(self, n_nodes: int = 16, gpus_per_node: int = 8):
+        self.nodes: List[Node] = [Node(i, gpus_per_node)
+                                  for i in range(n_nodes)]
+        self.gpus_per_node = gpus_per_node
+        # placement: task index per node (None = free pool)
+        self.placement: Dict[int, Optional[int]] = {
+            i: None for i in range(n_nodes)}
+
+    # ---- capacity ----------------------------------------------------------
+
+    def healthy_nodes(self) -> List[Node]:
+        return [n for n in self.nodes if n.healthy]
+
+    def healthy_workers(self) -> int:
+        return sum(n.n_gpus for n in self.healthy_nodes())
+
+    def free_healthy_nodes(self) -> List[Node]:
+        return [n for n in self.healthy_nodes()
+                if self.placement[n.node_id] is None]
+
+    # ---- failures / recovery ----------------------------------------------
+
+    def fail_node(self, node_id: int, repair_done_at: float) -> Optional[int]:
+        """Drain a node; returns the task index that owned it (if any)."""
+        node = self.nodes[node_id]
+        node.healthy = False
+        node.repair_done_at = repair_done_at
+        owner = self.placement[node_id]
+        self.placement[node_id] = None
+        return owner
+
+    def recover_node(self, node_id: int) -> None:
+        node = self.nodes[node_id]
+        node.healthy = True
+        node.repair_done_at = None
+
+    # ---- placement ---------------------------------------------------------
+
+    def nodes_of(self, task: int) -> List[int]:
+        return [nid for nid, t in self.placement.items() if t == task]
+
+    def workers_of(self, task: int) -> int:
+        return len(self.nodes_of(task)) * self.gpus_per_node
+
+    def assign(self, assignment: List[int]) -> None:
+        """Re-place tasks onto healthy nodes for a worker assignment
+        (multiples of gpus_per_node; remainders are rounded down —
+        GPU-granular placement inside a node is handled by the task's own
+        parallelism config)."""
+        for nid in self.placement:
+            self.placement[nid] = None
+        free = [n.node_id for n in self.healthy_nodes()]
+        for ti, workers in enumerate(assignment):
+            need = workers // self.gpus_per_node
+            for _ in range(need):
+                if not free:
+                    break
+                self.placement[free.pop(0)] = ti

@@ -1,0 +1,138 @@
+"""The Unicron control loop — operational glue between agents and the
+coordinator (§3, Figure 5).
+
+Agents publish heartbeats and error reports into the status monitor (the
+etcd-like KV store); the control loop is the coordinator-side poller
+that turns that stream into decisions:
+
+  1. expire heartbeat leases -> LOST_CONNECTION (SEV1) for silent nodes,
+  2. collect in-band error reports whose detection latency has elapsed,
+  3. classify severity and decide the action (reattempt / restart /
+     reconfigure) with escalation on repeated failure,
+  4. on SEV1: drain the node in the cluster state and fetch the
+     reconfiguration plan (lookup table first, fresh solve on miss),
+  5. on node repair: rejoin + replan.
+
+The loop is deliberately synchronous and driven by an external clock so
+the discrete-event simulator and the real examples share it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.agent import UnicronAgent
+from repro.core.cluster import Cluster
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.detection import ErrorKind, Severity, classify
+from repro.core.handling import Action, HandlingDecision, Trigger
+from repro.core.kvstore import KVStore
+
+
+@dataclass
+class LoopEvent:
+    """One decision taken by the control loop (for logs / tests)."""
+    time: float
+    node: int
+    kind: ErrorKind
+    action: Action
+    plan: Optional[Tuple[int, ...]] = None
+
+
+class ControlLoop:
+    def __init__(self, coordinator: UnicronCoordinator, cluster: Cluster,
+                 agents: Dict[int, UnicronAgent]):
+        self.coord = coordinator
+        self.cluster = cluster
+        self.agents = agents
+        self.kv = coordinator.kv
+        self.events: List[LoopEvent] = []
+        self._seen: set = set()
+        self._case_seq = 0
+
+    # ---- one tick of the loop ---------------------------------------------
+
+    def tick(self, now: float) -> List[LoopEvent]:
+        out: List[LoopEvent] = []
+        out += self._expire_heartbeats(now)
+        out += self._drain_error_reports(now)
+        out += self._rejoin_repaired(now)
+        self.events += out
+        return out
+
+    def _expire_heartbeats(self, now: float) -> List[LoopEvent]:
+        out = []
+        for key in self.kv.expire(now):
+            if not key.startswith("/nodes/"):
+                continue
+            node = int(key.split("/")[2])
+            out.append(self._handle(now, node, ErrorKind.LOST_CONNECTION))
+        return out
+
+    def _drain_error_reports(self, now: float) -> List[LoopEvent]:
+        out = []
+        for key, rec in sorted(self.kv.prefix("/errors/").items()):
+            if key in self._seen or rec["visible_at"] > now:
+                continue
+            self._seen.add(key)
+            out.append(self._handle(now, rec["node"],
+                                    ErrorKind(rec["kind"])))
+        return out
+
+    def _rejoin_repaired(self, now: float) -> List[LoopEvent]:
+        out = []
+        for node in self.cluster.nodes:
+            if not node.healthy and node.repair_done_at is not None \
+                    and node.repair_done_at <= now:
+                self.cluster.recover_node(node.node_id)
+                if node.node_id in self.agents:
+                    self.agents[node.node_id].alive = True
+                plan = self.coord.reconfigure(
+                    self.cluster.healthy_workers(),
+                    trigger=Trigger.NODE_JOIN)
+                self.cluster.assign(list(plan.assignment))
+                out.append(LoopEvent(now, node.node_id,
+                                     ErrorKind.LOST_CONNECTION,
+                                     Action.RESUME, plan.assignment))
+        return out
+
+    # ---- decision path -----------------------------------------------------
+
+    def _handle(self, now: float, node: int, kind: ErrorKind) -> LoopEvent:
+        self._case_seq += 1
+        case_id = f"{node}:{kind.value}:{self._case_seq}"
+        decision = self.coord.on_error(case_id, kind)
+        plan = None
+        if decision.action is Action.RECONFIGURE:
+            owner = self.cluster.placement.get(node)
+            self.cluster.fail_node(node, repair_done_at=now + 86400.0)
+            p = self.coord.reconfigure(self.cluster.healthy_workers(),
+                                       faulted_task=owner,
+                                       trigger=Trigger.ERROR)
+            self.cluster.assign(list(p.assignment))
+            plan = p.assignment
+        self.coord.close_case(case_id)
+        return LoopEvent(now, node, kind, decision.action, plan)
+
+    # ---- escalation entry point (agents report an action failed) ----------
+
+    def action_failed(self, now: float, node: int,
+                      kind: ErrorKind) -> LoopEvent:
+        """A reattempt/restart did not fix it: escalate one level."""
+        self._case_seq += 1
+        case_id = f"{node}:{kind.value}:esc{self._case_seq}"
+        self.coord.on_error(case_id, kind)
+        decision = self.coord.on_action_failed(case_id)
+        plan = None
+        if decision.action is Action.RECONFIGURE:
+            owner = self.cluster.placement.get(node)
+            self.cluster.fail_node(node, repair_done_at=now + 86400.0)
+            p = self.coord.reconfigure(self.cluster.healthy_workers(),
+                                       faulted_task=owner,
+                                       trigger=Trigger.ERROR)
+            self.cluster.assign(list(p.assignment))
+            plan = p.assignment
+        self.coord.close_case(case_id)
+        ev = LoopEvent(now, node, kind, decision.action, plan)
+        self.events.append(ev)
+        return ev

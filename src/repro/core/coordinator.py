@@ -1,0 +1,120 @@
+"""Unicron coordinator (§3.2) — cluster-level decisions.
+
+Consumes agent status from the KV store, classifies failures, decides
+actions (handling.py), and generates reconfiguration plans (planner.py)
+over *all* tasks in the cluster.  The discrete-event simulator provides
+time; every decision here is the real algorithm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import planner, transition, waf as waf_mod
+from repro.core.costmodel import Hardware
+from repro.core.detection import ErrorKind, Severity, classify
+from repro.core.handling import (Action, FailureCase, HandlingDecision,
+                                 Trigger, decide)
+from repro.core.kvstore import KVStore
+from repro.core.planner import Plan, PlanInput, PlanTable
+from repro.core.waf import Task
+
+
+@dataclass
+class TaskEntry:
+    """Coordinator-side record of a running task (the 'task set')."""
+    task: Task
+    n_workers: int
+    status: str = "running"            # running | transitioning | waiting
+    avg_iter_s: float = 30.0
+    state_bytes: float = 0.0
+
+
+class UnicronCoordinator:
+    def __init__(self, tasks: List[Task], assignment: List[int],
+                 hw: Hardware, kv: Optional[KVStore] = None,
+                 mtbf_per_worker_s: float = 30 * 86400.0,
+                 d_transition_s: float = 120.0):
+        self.hw = hw
+        self.kv = kv or KVStore()
+        self.entries: List[TaskEntry] = [
+            TaskEntry(task=t, n_workers=x,
+                      state_bytes=16.0 * t.model.n_params)
+            for t, x in zip(tasks, assignment)]
+        self.mtbf = mtbf_per_worker_s
+        self.d_transition = d_transition_s
+        self.open_cases: Dict[str, FailureCase] = {}
+        self._table: Optional[PlanTable] = None
+        self.refresh_plan_table()
+
+    # ---- plan generation -------------------------------------------------
+
+    def _plan_input(self, n_workers: int,
+                    faulted_task: Optional[int]) -> PlanInput:
+        tasks = tuple(e.task for e in self.entries)
+        assignment = tuple(e.n_workers for e in self.entries)
+        d_run = waf_mod.expected_run_duration(n_workers, self.mtbf)
+        return PlanInput(tasks, assignment, n_workers, d_run,
+                         self.d_transition,
+                         tuple(i == faulted_task
+                               for i in range(len(tasks))))
+
+    def refresh_plan_table(self) -> None:
+        """Precompute one-step lookahead plans (§5.2) for O(1) dispatch."""
+        assignment = [e.n_workers for e in self.entries]
+        d_run = waf_mod.expected_run_duration(sum(assignment), self.mtbf)
+        self._table = PlanTable([e.task for e in self.entries], assignment,
+                                self.hw, d_run, self.d_transition)
+
+    def plan_for(self, n_workers: int, faulted_task: Optional[int],
+                 lookup_key: Optional[str] = None) -> Tuple[Plan, bool]:
+        """Returns (plan, was_lookup_hit)."""
+        if lookup_key and self._table:
+            hit = self._table.lookup(lookup_key)
+            if hit is not None:
+                return hit, True
+        return planner.solve(self._plan_input(n_workers, faulted_task),
+                             self.hw), False
+
+    # ---- error handling ----------------------------------------------------
+
+    def on_error(self, case_id: str, kind: ErrorKind) -> HandlingDecision:
+        case = self.open_cases.get(case_id)
+        if case is None:
+            case = FailureCase.from_kind(kind)
+            self.open_cases[case_id] = case
+        return decide(case)
+
+    def on_action_failed(self, case_id: str) -> HandlingDecision:
+        """Escalate SEV3 -> SEV2 -> SEV1 (Figure 7)."""
+        case = self.open_cases[case_id]
+        case.record_failure()
+        return decide(case)
+
+    def close_case(self, case_id: str) -> None:
+        self.open_cases.pop(case_id, None)
+
+    # ---- reconfiguration entry points (Figure 7 triggers 3..6) -----------
+
+    def reconfigure(self, n_workers_now: int,
+                    faulted_task: Optional[int] = None,
+                    trigger: Trigger = Trigger.ERROR) -> Plan:
+        key = None
+        if trigger is Trigger.ERROR and faulted_task is not None:
+            key = f"fault:{faulted_task}"
+        elif trigger is Trigger.NODE_JOIN:
+            key = "join:1"
+        plan, hit = self.plan_for(n_workers_now, faulted_task, key)
+        if hit and sum(plan.assignment) > n_workers_now:
+            # precomputed scenario does not match reality: fresh solve
+            plan, _ = self.plan_for(n_workers_now, faulted_task, None)
+        for e, x in zip(self.entries, plan.assignment):
+            e.n_workers = x
+        self.refresh_plan_table()
+        return plan
+
+    # ---- accounting --------------------------------------------------------
+
+    def cluster_waf(self) -> float:
+        return sum(waf_mod.waf(e.task, e.n_workers, self.hw)
+                   for e in self.entries if e.status == "running")

@@ -1,0 +1,173 @@
+"""Analytic throughput model T(t, x) — achieved aggregate FLOP/s of a task
+on x workers (§5.1).
+
+The paper calibrates T(t,x) by profiling tasks on the cluster and using
+automatic execution-plan search (Alpa [55]) for the optimal parallelism
+settings.  We reproduce that with a Megatron-style analytic model: for a
+given worker count we enumerate (dp, tp, pp) configurations, check memory
+feasibility, estimate iteration time from compute + TP/PP/DP communication
+terms, and take the best.  This exhibits the paper's Figure-4 phenomena:
+non-linear and occasionally *non-monotonic* aggregate FLOP/s in x (awkward
+worker counts force worse configurations or idle workers).
+
+Two hardware presets: A800 (the paper's testbed) and TPU v5e (our target);
+all experiments record which preset they used.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per worker, FLOP/s (bf16)
+    hbm_bytes: float           # per worker
+    hbm_bw: float              # bytes/s
+    intra_bw: float            # bytes/s per worker, fast domain (NVLink/ICI)
+    inter_bw: float            # bytes/s per worker, slow domain (RoCE/DCN)
+    intra_size: int            # workers per fast domain (node / ICI pod)
+    compute_eff: float         # achievable fraction of peak on matmuls
+
+
+A800 = Hardware(name="A800", peak_flops=312e12, hbm_bytes=80e9,
+                hbm_bw=2.0e12, intra_bw=200e9, inter_bw=12.5e9,
+                intra_size=8, compute_eff=0.62)
+
+# TPU v5e chip; ICI is the fast domain (full pod), DCN the slow one.
+TPU_V5E = Hardware(name="TPUv5e", peak_flops=197e12, hbm_bytes=16e9,
+                   hbm_bw=819e9, intra_bw=50e9, inter_bw=6.25e9,
+                   intra_size=256, compute_eff=0.60)
+
+
+@dataclass(frozen=True)
+class TaskModel:
+    """Static description of a training task for the cost model."""
+    name: str
+    n_params: float            # N
+    n_layers: int
+    d_model: int
+    seq_len: int = 2048
+    global_batch: int = 512
+
+    @classmethod
+    def from_arch(cls, cfg: ArchConfig, seq_len: int = 2048,
+                  global_batch: int = 512) -> "TaskModel":
+        return cls(name=cfg.name, n_params=float(cfg.param_count()),
+                   n_layers=cfg.n_layers, d_model=cfg.d_model,
+                   seq_len=seq_len, global_batch=global_batch)
+
+
+@dataclass(frozen=True)
+class PlanPoint:
+    """One feasible (dp, tp, pp) evaluation."""
+    dp: int
+    tp: int
+    pp: int
+    t_iter: float              # seconds
+    agg_flops: float           # achieved aggregate FLOP/s
+    mem_per_worker: float      # bytes
+
+
+def _mem_per_worker(task: TaskModel, tp: int, pp: int, micro_b: int,
+                    hw: Hardware) -> float:
+    shard = task.n_params / (tp * pp)
+    static = 16.0 * shard                       # bf16 w+g, fp32 m/v/master
+    # activations with selective recompute, one in-flight micro-batch per
+    # stage plus pipeline depth amplification
+    act = (22.0 * task.seq_len * micro_b * task.d_model
+           * (task.n_layers / pp) / tp) * min(pp, 4)
+    return static + act
+
+
+def _iter_time(task: TaskModel, dp: int, tp: int, pp: int, micro_b: int,
+               hw: Hardware) -> float:
+    B, S, N, L, d = (task.global_batch, task.seq_len, task.n_params,
+                     task.n_layers, task.d_model)
+    m = max(1, math.ceil(B / (dp * micro_b)))   # micro-batches per DP rank
+    tokens = B * S
+    flops = 6.0 * N * tokens
+    t_comp = flops / (dp * tp * pp * hw.peak_flops * hw.compute_eff)
+    # pipeline bubble
+    t_comp *= (m + pp - 1) / m
+    # TP collectives: 4 all-reduces per layer of (S*micro_b*d) bf16 acts,
+    # ring factor 2(tp-1)/tp, over the fast domain
+    if tp > 1:
+        bw = hw.intra_bw if tp <= hw.intra_size else hw.inter_bw
+        tp_bytes = 4 * L / pp * (2.0 * S * micro_b * d) * m
+        t_tp = tp_bytes * 2 * (tp - 1) / tp / bw
+    else:
+        t_tp = 0.0
+    # DP gradient all-reduce of the shard, slow domain (overlapped ~50%)
+    if dp > 1:
+        g_bytes = 2.0 * N / (tp * pp)
+        workers_per_node = hw.intra_size
+        bw = hw.intra_bw if dp * tp * pp <= workers_per_node else hw.inter_bw
+        t_dp = 0.5 * g_bytes * 2 * (dp - 1) / dp / bw
+    else:
+        t_dp = 0.0
+    # imbalance when dp does not divide B
+    imbalance = math.ceil(B / dp) / (B / dp)
+    return (t_comp + t_tp + t_dp) * imbalance
+
+
+@lru_cache(maxsize=65536)
+def _best_plan(task: TaskModel, x: int, hw: Hardware) -> Optional[PlanPoint]:
+    if x <= 0:
+        return None
+    best: Optional[PlanPoint] = None
+    tps = [t for t in (1, 2, 4, 8, 16) if t <= min(x, hw.intra_size)]
+    for tp in tps:
+        pp = 1
+        while tp * pp <= x and pp <= task.n_layers:
+            if task.n_layers % pp == 0:
+                dp = x // (tp * pp)
+                if dp >= 1 and dp <= task.global_batch:
+                    for micro_b in (1, 2, 4):
+                        if micro_b * dp > task.global_batch:
+                            continue
+                        mem = _mem_per_worker(task, tp, pp, micro_b, hw)
+                        if mem > hw.hbm_bytes:
+                            continue
+                        t = _iter_time(task, dp, tp, pp, micro_b, hw)
+                        used_flops = (6.0 * task.n_params * task.global_batch
+                                      * task.seq_len) / t
+                        pt = PlanPoint(dp, tp, pp, t, used_flops, mem)
+                        if best is None or pt.agg_flops > best.agg_flops:
+                            best = pt
+            pp *= 2
+    return best
+
+
+def achieved_flops(task: TaskModel, x: int,
+                   hw: Hardware = A800) -> float:
+    """T(t, x): achieved aggregate FLOP/s with the best feasible plan,
+    0.0 if no configuration fits."""
+    p = _best_plan(task, x, hw)
+    return 0.0 if p is None else p.agg_flops
+
+
+def best_plan(task: TaskModel, x: int, hw: Hardware = A800):
+    return _best_plan(task, x, hw)
+
+
+def min_feasible_workers(task: TaskModel, hw: Hardware = A800,
+                         upper: int = 4096) -> int:
+    """Smallest x with a feasible plan (T_necessary floor)."""
+    x = 1
+    while x <= upper:
+        if _best_plan(task, x, hw) is not None:
+            return x
+        x += 1
+    return upper
+
+
+def flops_ratio(task: TaskModel, x: int, hw: Hardware = A800) -> float:
+    """Achieved fraction of the x workers' theoretical peak (Fig. 4)."""
+    t = achieved_flops(task, x, hw)
+    return t / (x * hw.peak_flops) if x else 0.0

@@ -1,0 +1,71 @@
+"""etcd-like distributed KV store (the coordinator's *status monitor*).
+
+Single-process stand-in for etcd [11]: prefix watches, leases with TTL
+(expiry driven by the simulator clock), and compare-and-swap.  The
+coordinator consolidates agent-reported process statuses here (§3.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class _Entry:
+    value: Any
+    lease_expires: Optional[float] = None       # absolute sim time
+
+
+class KVStore:
+    def __init__(self):
+        self._data: Dict[str, _Entry] = {}
+        self._watches: List[Tuple[str, Callable[[str, str, Any], None]]] = []
+
+    # ---- basic ops ---------------------------------------------------------
+
+    def put(self, key: str, value: Any, *, ttl: Optional[float] = None,
+            now: float = 0.0) -> None:
+        self._data[key] = _Entry(value, now + ttl if ttl else None)
+        self._notify("put", key, value)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        e = self._data.get(key)
+        return default if e is None else e.value
+
+    def delete(self, key: str) -> None:
+        if key in self._data:
+            del self._data[key]
+            self._notify("delete", key, None)
+
+    def prefix(self, pre: str) -> Dict[str, Any]:
+        return {k: e.value for k, e in self._data.items()
+                if k.startswith(pre)}
+
+    def cas(self, key: str, expect: Any, value: Any) -> bool:
+        if self.get(key) == expect:
+            self.put(key, value)
+            return True
+        return False
+
+    # ---- leases (heartbeats) -----------------------------------------------
+
+    def expire(self, now: float) -> List[str]:
+        """Drop entries whose lease lapsed; returns the expired keys.
+        The coordinator treats an expired /nodes/<id>/alive key as a lost
+        connection -> SEV1 (Table 1)."""
+        dead = [k for k, e in self._data.items()
+                if e.lease_expires is not None and e.lease_expires <= now]
+        for k in dead:
+            del self._data[k]
+            self._notify("expire", k, None)
+        return dead
+
+    # ---- watches -----------------------------------------------------------
+
+    def watch(self, pre: str, cb: Callable[[str, str, Any], None]) -> None:
+        self._watches.append((pre, cb))
+
+    def _notify(self, op: str, key: str, value: Any) -> None:
+        for pre, cb in self._watches:
+            if key.startswith(pre):
+                cb(op, key, value)

@@ -1,0 +1,145 @@
+"""Optimal reconfiguration plan generation (§5.2).
+
+Knapsack-style dynamic program over (tasks x workers):
+
+    S(i, j) = max_k { S(i-1, j-k) + G(t_i, k) }           (Eq. 5)
+
+O(m n^2) time; ``PlanTable`` additionally precomputes the one-step
+lookahead lookup table the paper uses for O(1) dispatch at failure time —
+keyed by (faulted task or joining worker count) scenarios.
+
+``brute_force`` is an exponential reference used by the property tests.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import waf as waf_mod
+from repro.core.costmodel import Hardware
+from repro.core.waf import Task
+
+
+@dataclass(frozen=True)
+class PlanInput:
+    tasks: Tuple[Task, ...]
+    assignment: Tuple[int, ...]        # current workers per task (x_i)
+    n_workers: int                     # n' available after the event
+    d_running: float
+    d_transition: float
+    faulted: Tuple[bool, ...]          # per task: did one of its workers fault
+
+
+@dataclass(frozen=True)
+class Plan:
+    assignment: Tuple[int, ...]
+    total_reward: float
+    waf: float                         # cluster WAF under the new assignment
+
+
+def _reward_row(inp: PlanInput, i: int, hw: Hardware) -> List[float]:
+    """G(t_i, k) for k = 0..n_workers."""
+    t = inp.tasks[i]
+    return [waf_mod.reward(t, inp.assignment[i], k,
+                           d_running=inp.d_running,
+                           d_transition=inp.d_transition,
+                           worker_faulted=inp.faulted[i], hw=hw)
+            for k in range(inp.n_workers + 1)]
+
+
+def solve(inp: PlanInput, hw: Hardware) -> Plan:
+    """Dynamic program (Eq. 5) with traceback."""
+    m, n = len(inp.tasks), inp.n_workers
+    rows = [_reward_row(inp, i, hw) for i in range(m)]
+    NEG = float("-inf")
+    # S[i][j]: best reward of first i tasks using j workers
+    S = [[0.0] + [0.0] * n]
+    choice: List[List[int]] = []
+    for i in range(1, m + 1):
+        row = [NEG] * (n + 1)
+        ch = [0] * (n + 1)
+        g = rows[i - 1]
+        for j in range(n + 1):
+            best, bk = NEG, 0
+            for k in range(j + 1):
+                v = S[i - 1][j - k] + g[k]
+                if v > best:
+                    best, bk = v, k
+            row[j], ch[j] = best, bk
+        S.append(row)
+        choice.append(ch)
+    # traceback from S(m, n)
+    assign = [0] * m
+    j = max(range(n + 1), key=lambda jj: S[m][jj])
+    total = S[m][j]
+    for i in range(m, 0, -1):
+        k = choice[i - 1][j]
+        assign[i - 1] = k
+        j -= k
+    cluster_waf = sum(waf_mod.waf(t, x, hw)
+                      for t, x in zip(inp.tasks, assign))
+    return Plan(tuple(assign), total, cluster_waf)
+
+
+def brute_force(inp: PlanInput, hw: Hardware) -> Plan:
+    """Exponential reference solver (tests only)."""
+    m, n = len(inp.tasks), inp.n_workers
+    rows = [_reward_row(inp, i, hw) for i in range(m)]
+    best: Optional[Tuple[float, Tuple[int, ...]]] = None
+    for assign in itertools.product(range(n + 1), repeat=m):
+        if sum(assign) > n:
+            continue
+        v = sum(rows[i][assign[i]] for i in range(m))
+        if best is None or v > best[0]:
+            best = (v, assign)
+    v, assign = best
+    cluster_waf = sum(waf_mod.waf(t, x, hw)
+                      for t, x in zip(inp.tasks, assign))
+    return Plan(tuple(assign), v, cluster_waf)
+
+
+class PlanTable:
+    """Precomputed lookup table (§5.2 'Complexity'): one-step lookahead
+    plans for every single-event scenario from the current configuration —
+    any task losing one worker, a worker joining, a task finishing —
+    giving O(1) dispatch when the event actually happens."""
+
+    def __init__(self, tasks: Sequence[Task], assignment: Sequence[int],
+                 hw: Hardware, d_running: float, d_transition: float,
+                 workers_per_fault: int = 8):
+        self.tasks = tuple(tasks)
+        self.assignment = tuple(assignment)
+        self.hw = hw
+        self.d_running = d_running
+        self.d_transition = d_transition
+        self.workers_per_fault = workers_per_fault  # a node drain = 8 GPUs
+        self.table: Dict[str, Plan] = {}
+        self._precompute()
+
+    def _scenario_input(self, n_workers: int,
+                        faulted_task: Optional[int]) -> PlanInput:
+        faulted = tuple(i == faulted_task for i in range(len(self.tasks)))
+        return PlanInput(self.tasks, self.assignment, n_workers,
+                         self.d_running, self.d_transition, faulted)
+
+    def _precompute(self) -> None:
+        n_now = sum(self.assignment)
+        w = self.workers_per_fault
+        for ti in range(len(self.tasks)):
+            key = f"fault:{ti}"
+            self.table[key] = solve(
+                self._scenario_input(max(n_now - w, 0), ti), self.hw)
+        self.table["join:1"] = solve(
+            self._scenario_input(n_now + w, None), self.hw)
+        for ti in range(len(self.tasks)):
+            # task ti finished: its workers return to the pool
+            rem_tasks = self.tasks[:ti] + self.tasks[ti + 1:]
+            rem_assign = self.assignment[:ti] + self.assignment[ti + 1:]
+            inp = PlanInput(rem_tasks, rem_assign, n_now,
+                            self.d_running, self.d_transition,
+                            (False,) * len(rem_tasks))
+            self.table[f"finish:{ti}"] = solve(inp, self.hw)
+
+    def lookup(self, key: str) -> Optional[Plan]:
+        return self.table.get(key)

@@ -1,0 +1,264 @@
+"""Discrete-event cluster simulator (§7.5) driving the REAL Unicron code.
+
+The simulator replaces wall-clock time and GPUs only: detection latencies
+come from ``core.detection``, recovery decisions from the severity
+workflow, reconfiguration plans from the real DP planner through
+``UnicronCoordinator``, and transition durations from ``core.transition``.
+Baselines are recovery *policies* with their published behaviours:
+
+  megatron   restart-from-checkpoint + hot spare; 30-min watchdog
+             detection for non-node-loss failures; reconfigures only the
+             affected task (down-scales on node loss until repair).
+  oobleck    dynamic reconfiguration (no checkpoint reload), pipeline
+             templates; lower normal-case efficiency (Fig. 3a).
+  bamboo     redundant computation: keeps running through failures but
+             pays a constant throughput tax; lowest efficiency.
+  varuna     job morphing + checkpoint restart; low efficiency.
+  unicron    everything in this repo: in-band detection, lookup-table
+             plans over ALL tasks, partial-result reuse.
+
+WAF is integrated over the trace (the Fig. 11 y-axis); ``accumulated``
+at the end of the run is the Fig. 11b/d number.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import costmodel, transition, waf as waf_mod
+from repro.core.cluster import Cluster
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.detection import ErrorKind, Severity, classify, detection_time
+from repro.core.traces import FailureEvent, trace_span
+from repro.core.waf import Task
+
+# Normal-case training efficiency relative to Megatron (Figure 3a: the
+# resilience-first systems run at a fraction of Megatron's throughput).
+EFFICIENCY = {
+    "unicron": 1.00,        # inherits all Megatron optimizations
+    "megatron": 1.00,
+    "oobleck": 0.38,
+    "bamboo": 0.30,         # includes the redundant-computation tax
+    "varuna": 0.29,
+}
+
+# Megatron's deployment keeps hot-spare nodes that substitute for failed
+# ones (paper §7.3 footnote 1): capacity is preserved while a spare is
+# available, at the cost of idling the spare.  Unicron instead re-plans
+# and uses every healthy node productively.
+HOT_SPARES = {"megatron": 1}
+
+
+@dataclass
+class SimTask:
+    task: Task
+    workers: int
+    avg_iter_s: float = 30.0
+    blocked_until: float = 0.0          # transitioning/restarting until t
+    affected_first: bool = False        # baselines: reconfigure priority
+
+
+@dataclass
+class SimResult:
+    policy: str
+    accumulated_waf: float              # integral of WAF dt
+    timeline: List[Tuple[float, float]]  # (t, cluster WAF) samples
+    n_reconfigs: int
+    downtime_s: float                   # total task-seconds blocked
+
+
+class TraceSimulator:
+    def __init__(self, tasks: List[Task], assignment: List[int],
+                 policy: str, hw=costmodel.A800, n_nodes: int = 16,
+                 gpus_per_node: int = 8, *,
+                 ablate_detection: bool = False,
+                 ablate_transition: bool = False,
+                 ablate_replan: bool = False):
+        """``ablate_*``: component ablations for the unicron policy —
+        swap one Unicron mechanism for its baseline counterpart to
+        measure that component's contribution (benchmarks/bench_ablation).
+        """
+        self.policy = policy
+        self.ablate_detection = ablate_detection
+        self.ablate_transition = ablate_transition
+        self.ablate_replan = ablate_replan
+        self.hw = hw
+        self.eff = EFFICIENCY[policy]
+        self.cluster = Cluster(n_nodes, gpus_per_node)
+        self.gpn = gpus_per_node
+        self.tasks = [SimTask(task=t, workers=x)
+                      for t, x in zip(tasks, assignment)]
+        self.cluster.assign([t.workers for t in self.tasks])
+        self.coord: Optional[UnicronCoordinator] = None
+        if policy == "unicron":
+            self.coord = UnicronCoordinator(tasks, assignment, hw)
+        self.spares = HOT_SPARES.get(policy, 0)
+        self.n_reconfigs = 0
+        self.downtime = 0.0
+
+    # ---- instantaneous cluster WAF ----------------------------------------
+
+    def cluster_waf(self, now: float) -> float:
+        total = 0.0
+        for st in self.tasks:
+            if now < st.blocked_until or st.workers <= 0:
+                continue
+            total += waf_mod.waf(st.task, st.workers, self.hw) * self.eff
+        return total
+
+    # ---- policy behaviours -------------------------------------------------
+
+    def _detect_s(self, kind: ErrorKind, avg_iter: float) -> float:
+        unicron = self.policy == "unicron" and not self.ablate_detection
+        return detection_time(kind, avg_iter, unicron=unicron)
+
+    def _transition_s(self, st: SimTask, detect_s: float,
+                      sev: Severity) -> float:
+        state_bytes = 16.0 * st.task.model.n_params
+        if self.policy == "unicron" and self.ablate_transition:
+            c = transition.estimate_baseline(
+                state_bytes, detect_s, dynamic_reconfig=False,
+                ckpt_restart=True)
+            return c.total
+        if self.policy == "unicron":
+            dp = max(st.workers // 8, 1)
+            c = transition.estimate_unicron(
+                state_bytes, st.avg_iter_s, dp_degree=dp, detect_s=detect_s,
+                lookup_hit=True)
+            return c.total
+        if self.policy in ("megatron", "varuna"):
+            c = transition.estimate_baseline(
+                state_bytes, detect_s, dynamic_reconfig=False,
+                ckpt_restart=True)
+            return c.total
+        # oobleck / bamboo: dynamic reconfiguration
+        c = transition.estimate_baseline(
+            state_bytes, detect_s, dynamic_reconfig=True, ckpt_restart=False)
+        # bamboo's redundancy rides through SEV2/3 without interruption
+        if self.policy == "bamboo" and sev is not Severity.SEV1:
+            return 0.0
+        return c.total
+
+    def _reconfigure(self, now: float, faulted_task: Optional[int]) -> None:
+        """Node-count change: redistribute workers."""
+        n_avail = self.cluster.healthy_workers()
+        self.n_reconfigs += 1
+        if self.policy == "unicron" and not self.ablate_replan:
+            plan = self.coord.reconfigure(n_avail, faulted_task)
+            for st, x in zip(self.tasks, plan.assignment):
+                st.workers = x
+        else:
+            # baselines only touch the directly-affected task: it shrinks
+            # to what is left after the others keep their nodes
+            others = sum(st.workers for i, st in enumerate(self.tasks)
+                         if i != faulted_task)
+            if faulted_task is not None:
+                st = self.tasks[faulted_task]
+                st.workers = max(0, min(st.workers, n_avail - others))
+                st.workers -= st.workers % self.gpn
+                st.affected_first = True
+        self.cluster.assign([t.workers for t in self.tasks])
+
+    def _node_rejoin(self, now: float) -> None:
+        n_avail = self.cluster.healthy_workers()
+        self.n_reconfigs += 1
+        if self.policy == "unicron" and not self.ablate_replan:
+            plan = self.coord.reconfigure(n_avail, None)
+            for st, x in zip(self.tasks, plan.assignment):
+                st.workers = x
+        else:
+            # restore the first-affected task toward its original size
+            assigned = sum(st.workers for st in self.tasks)
+            spare = n_avail - assigned
+            for st in self.tasks:
+                if st.affected_first and spare >= self.gpn:
+                    st.workers += self.gpn
+                    spare -= self.gpn
+                    st.affected_first = False
+                    break
+        self.cluster.assign([t.workers for t in self.tasks])
+
+    # ---- main loop -----------------------------------------------------------
+
+    def run(self, trace: List[FailureEvent],
+            span_s: Optional[float] = None) -> SimResult:
+        span = span_s or trace_span(trace)
+        events: List[Tuple[float, str, object]] = [
+            (e.time, "fail", e) for e in trace if e.time <= span]
+        for e in trace:
+            if e.repair_s is not None and e.time + e.repair_s <= span:
+                events.append((e.time + e.repair_s, "repair", e))
+        events.sort(key=lambda x: x[0])
+
+        acc, last_t = 0.0, 0.0
+        timeline: List[Tuple[float, float]] = [(0.0, self.cluster_waf(0.0))]
+        for t, kind, ev in events:
+            # integrate WAF piecewise (block expiries create breakpoints)
+            breaks = sorted({st.blocked_until for st in self.tasks
+                             if last_t < st.blocked_until < t} | {t})
+            for b in breaks:
+                acc += self.cluster_waf((last_t + b) / 2) * (b - last_t)
+                last_t = b
+            if kind == "fail":
+                self._on_failure(t, ev)
+            else:
+                node = ev.node % len(self.cluster.nodes)
+                if HOT_SPARES.get(self.policy, 0) and not any(
+                        st.affected_first for st in self.tasks):
+                    # no task was down-scaled: the repaired node refills
+                    # the spare pool instead of joining a task
+                    self.spares += 1
+                    continue
+                self.cluster.recover_node(node)
+                self._node_rejoin(t)
+            timeline.append((t, self.cluster_waf(t)))
+        # tail
+        breaks = sorted({st.blocked_until for st in self.tasks
+                         if last_t < st.blocked_until < span} | {span})
+        for b in breaks:
+            acc += self.cluster_waf((last_t + b) / 2) * (b - last_t)
+            last_t = b
+        timeline.append((span, self.cluster_waf(span)))
+        return SimResult(self.policy, acc, timeline, self.n_reconfigs,
+                         self.downtime)
+
+    def _on_failure(self, now: float, ev: FailureEvent) -> None:
+        node = ev.node % len(self.cluster.nodes)
+        sev = ev.severity
+        owner = self.cluster.placement.get(node)
+        if owner is None:
+            owners = [i for i, st in enumerate(self.tasks) if st.workers > 0]
+            owner = owners[node % len(owners)] if owners else None
+        if owner is None:
+            return
+        st = self.tasks[owner]
+        detect = self._detect_s(ev.kind, st.avg_iter_s)
+        trans = self._transition_s(st, detect, sev)
+        if sev is Severity.SEV1:
+            if self.spares > 0:
+                # hot spare substitutes: capacity preserved, transition
+                # (restart-from-checkpoint onto the spare) still paid
+                self.spares -= 1
+                st.blocked_until = max(st.blocked_until, now + trans)
+                self.downtime += trans
+                return
+            self.cluster.fail_node(node, now + (ev.repair_s or 0.0))
+            self._reconfigure(now, owner)
+            st.blocked_until = max(st.blocked_until, now + trans)
+            self.downtime += trans
+        else:
+            # SEV2/SEV3: restart/reattempt in place, no capacity change
+            st.blocked_until = max(st.blocked_until, now + trans)
+            self.downtime += trans
+
+
+def run_policies(tasks: List[Task], assignment: List[int],
+                 trace: List[FailureEvent],
+                 policies: Optional[List[str]] = None,
+                 hw=costmodel.A800) -> Dict[str, SimResult]:
+    out = {}
+    for p in policies or list(EFFICIENCY):
+        sim = TraceSimulator(tasks, list(assignment), p, hw)
+        out[p] = sim.run(trace)
+    return out

@@ -1,0 +1,49 @@
+"""WAF — weighted achieved aggregate FLOP/s (§5.1, Eq. 2) and the
+reconfiguration reward G (Eq. 3/4)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core import costmodel
+from repro.core.costmodel import Hardware, TaskModel
+
+
+@dataclass(frozen=True)
+class Task:
+    """A cluster training task: model + priority weight + min requirement."""
+    model: TaskModel
+    weight: float = 1.0                    # w(t), recommended 0.5..2.0
+    min_workers: Optional[int] = None      # T_necessary(t); None = auto
+
+    def necessary(self, hw: Hardware) -> int:
+        if self.min_workers is not None:
+            return self.min_workers
+        return costmodel.min_feasible_workers(self.model, hw)
+
+
+def waf(task: Task, x: int, hw: Hardware) -> float:
+    """F(t, x) = w(t) * T(t, x) if requirement satisfied else 0 (Eq. 2)."""
+    if x < task.necessary(hw) or x <= 0:
+        return 0.0
+    return task.weight * costmodel.achieved_flops(task.model, x, hw)
+
+
+def reward(task: Task, x_old: int, x_new: int, *, d_running: float,
+           d_transition: float, worker_faulted: bool,
+           hw: Hardware) -> float:
+    """G(t, x') (Eq. 3): post-reconfiguration WAF over the expected run
+    duration, minus the WAF lost during the transition when the task must
+    transition (Eq. 4 indicator)."""
+    g = waf(task, x_new, hw) * d_running
+    if x_old != x_new or worker_faulted:
+        g -= waf(task, x_old, hw) * d_transition
+    return g
+
+
+def expected_run_duration(n_workers: int, mtbf_per_worker: float) -> float:
+    """D_running(n'): expected time to next failure with n' workers (larger
+    pools fail sooner)."""
+    if n_workers <= 0:
+        return 0.0
+    return mtbf_per_worker / n_workers

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, microbatches, stack_microbatches
+
+__all__ = ["SyntheticLM", "microbatches", "stack_microbatches"]

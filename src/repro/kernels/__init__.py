@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+The paper (Unicron) has no kernel-level contribution — its substrate
+does.  Three hot-spots get TPU-native kernels, each with an ``ops.py``
+jit'd wrapper and a ``ref.py`` pure-jnp oracle:
+
+  * flash_attention — blocked online-softmax attention (GQA, sliding
+    window, softcap) with VMEM scratch across the kv grid dim.
+  * ssd_scan        — Mamba2 SSD chunk scan as dense MXU matmuls with the
+    (P, N) recurrent state carried in VMEM.
+  * rmsnorm         — fused normalization (one read + one write).
+
+Models select them with ``kernel="pallas"``; CPU validation runs through
+``interpret=True``.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

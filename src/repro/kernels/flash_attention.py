@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (forward) with GQA, causal/sliding-window
+masking and logit soft-capping.
+
+TPU mapping: the grid is (batch, head, q_blocks, kv_blocks) with the
+kv-block dimension LAST — the last grid dimension iterates sequentially
+on-core, so the online-softmax running state (acc, m, l) lives in VMEM
+scratch across kv iterations.  BlockSpecs tile Q/K/V into
+(block_q, head_dim) / (block_k, head_dim) VMEM tiles; block sizes default
+to 128 to match the MXU's 128x128 systolic tile.  GQA is expressed in the
+K/V index_map (query head h reads kv head h*KV//H), so KV tiles are never
+replicated in HBM.  Fully-masked kv blocks (causal skew / out of sliding
+window) are skipped with pl.when, which is where the causal 2x FLOP
+saving comes from.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 block_q: int, block_k: int, seq_k: int,
+                 causal: bool, window: int, softcap: float, q_offset: int,
+                 scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level skip: block is dead if fully above the causal diagonal
+    # or fully left of the sliding window
+    blk_q_lo = q_offset + iq * block_q
+    blk_q_hi = blk_q_lo + block_q - 1
+    blk_k_lo = ik * block_k
+    blk_k_hi = blk_k_lo + block_k - 1
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, blk_k_lo <= blk_q_hi)
+    if window > 0:
+        live = jnp.logical_and(live, blk_k_hi > blk_q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, Dv)
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+        if softcap and softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        q_pos = q_offset + iq * block_q + lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k                            # kv padding
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, q_offset: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, Dk/Dv) with H % KV == 0.
+    Returns (B, Sq, H, Dv)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    assert H % KV == 0, (H, KV)
+
+    block_q = max(8, min(block_q, Sq))
+    block_k = max(8, min(block_k, Sk))
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+    pq = nq * block_q - Sq
+    pk = nk * block_k - Sk
+    # (B, heads, S, D) layout for clean (block, head_dim) tiles
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_k=Sk,
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+        scale=1.0 / math.sqrt(D))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h * KV // H, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, iq, ik: (b, h * KV // H, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dv), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

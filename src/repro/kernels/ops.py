@@ -1,0 +1,108 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op runs the Pallas forward kernel and differentiates through the
+pure-jnp oracle (``ref.py``) via ``jax.custom_vjp`` — standard practice
+for forward-optimized kernels: the backward pass recomputes from the
+oracle, which is bitwise-compatible with the kernel output to float
+tolerance (asserted by tests/test_kernels.py).
+
+``interpret`` defaults to True off-TPU so the kernels execute (and are
+validated) on CPU; on a TPU backend the same ``pl.pallas_call`` lowers to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0) -> jnp.ndarray:
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               interpret=_interpret_default())
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, q_offset):
+    out = flash_attention(q, k, v, causal, window, softcap, q_offset)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128) -> Tuple:
+    return ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk,
+                        interpret=_interpret_default())
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk):
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk)
+    return out, (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda x, dt, A, Bm, Cm: ref.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk),
+        x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def rmsnorm(x, scale) -> jnp.ndarray:
+    return rmsnorm_fwd(x, scale, interpret=_interpret_default())
+
+
+def _rn_fwd(x, scale):
+    return rmsnorm(x, scale), (x, scale)
+
+
+def _rn_bwd(res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x, s: ref.rmsnorm(x, s), x, scale)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_rn_fwd, _rn_bwd)

@@ -1,0 +1,64 @@
+"""Collective-traffic statistics from compiled HLO text.
+
+``collective_bytes`` parses the SPMD-partitioned module (per-device view,
+``compiled.as_text()``) and sums the result-shape bytes of every
+communication op.  ``cost_analysis`` does not report collective traffic,
+so this parser is the source for the roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+# result type(s) then op name:  "%x = (bf16[8,128]{1,0}, ...) all-gather-start("
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes} from one partitioned HLO module.
+
+    ``-done`` ops are skipped (the ``-start`` carries the shape); for
+    async pairs the start op's result tuple includes both operand and
+    result buffers, so we halve those to avoid double counting.
+    """
+    stats: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(type_str)
+        if is_start and type_str.startswith("("):
+            b = b / 2              # async start tuple: (operand, result, ...)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict]:
+    stats = collective_stats(hlo_text)
+    return sum(v["bytes"] for v in stats.values()), stats

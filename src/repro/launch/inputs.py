@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run path).
+
+``input_specs(cfg, shape)`` returns the abstract batch for a training /
+prefill step; ``decode_specs`` the (caches, tokens, pos) for a serve step.
+Nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def n_micro_for(shape: ShapeConfig, dp: int) -> int:
+    """Micro-batch count: keep the per-DP-rank micro batch >= 1 while
+    bounding per-step activation memory.  train_4k (B=256) -> 8 micro
+    batches of 32 sequences."""
+    if shape.kind != "train":
+        return 1
+    for n in (8, 4, 2, 1):
+        mb = shape.global_batch // n
+        if mb % dp == 0 and mb >= dp:
+            return n
+    return 1
+
+
+def batch_struct(cfg: ArchConfig, batch: int, seq: int,
+                 stacked_micro: int = 0) -> Dict[str, Any]:
+    """Abstract batch dict for ``loss``/``forward``.
+
+    ``stacked_micro`` > 0 prepends the scan dim: (n_micro, batch, ...).
+    """
+    def s(*dims, dtype=jnp.int32):
+        lead = (stacked_micro,) if stacked_micro else ()
+        return SDS(lead + dims, dtype)
+
+    if cfg.modality == "audio_stub":
+        return {
+            "frames": s(batch, seq, cfg.d_model, dtype=jnp.float32),
+            "labels": s(batch, seq),
+            "loss_mask": s(batch, seq, dtype=jnp.float32),
+        }
+    out = {"tokens": s(batch, seq)}
+    if cfg.modality == "vision_stub":
+        out["prefix_embeds"] = s(batch, cfg.n_prefix_embeds, cfg.d_model,
+                                 dtype=jnp.float32)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dp: int) -> Dict:
+    """Abstract inputs for the train (stacked micro-batches) or prefill
+    step of (cfg, shape)."""
+    if shape.kind == "train":
+        n = n_micro_for(shape, dp)
+        return batch_struct(cfg, shape.global_batch // n, shape.seq_len,
+                            stacked_micro=n)
+    return batch_struct(cfg, shape.global_batch, shape.seq_len)
+
+
+def decode_specs(model, cfg: ArchConfig, shape: ShapeConfig
+                 ) -> Tuple[Any, Any, Any]:
+    """(caches, tokens, pos) ShapeDtypeStructs for one serve_step."""
+    caches = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 jnp.dtype(cfg.param_dtype)))
+    tokens = SDS((shape.global_batch,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return caches, tokens, pos

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — the dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax initialization and only then builds the mesh.
+
+Target hardware: TPU v5e.  One pod = a 16x16 ICI torus (256 chips); the
+multi-pod mesh adds a leading DCN "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+HBM_BYTES = 16e9                  # capacity
+ICI_BW = 50e9                     # bytes/s per link
+DCN_BW = 6.25e9                   # bytes/s per chip, cross-pod
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Laptop-scale mesh over the real local devices (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,95 @@
+"""Dry-run sweep driver: every (architecture x input shape x mesh).
+
+Spawns one subprocess per pair (``repro.launch.dryrun``) so each compile
+gets a fresh XLA context, appending JSONL results to ``--out``.  Pairs are
+ordered small-to-large so coverage lands early; already-present results
+are skipped (resumable).
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.sweep --out ... --multi-pod
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCH_ORDER = [  # roughly by model size (compile cost)
+    "gemma-2b", "granite-moe-3b-a800m", "mamba2-780m", "zamba2-1.2b",
+    "internvl2-2b", "qwen3-4b", "hubert-xlarge", "granite-3-8b",
+    "gemma3-12b", "deepseek-v3-671b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_done(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                done.add((r.get("arch"), r.get("shape"), r.get("mesh"),
+                          r.get("variant", "baseline")))
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--archs", nargs="*", default=ARCH_ORDER)
+    ap.add_argument("--shapes", nargs="*", default=SHAPE_ORDER)
+    args = ap.parse_args()
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = load_done(args.out)
+    todo = [(a, s) for s in args.shapes for a in args.archs
+            if (a, s, mesh_name, args.variant) not in done]
+    print(f"sweep: {len(todo)} pairs to run on {mesh_name}", flush=True)
+    failures = 0
+    for i, (arch, shape) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--json", args.out,
+               "--variant", args.variant]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[{i + 1}/{len(todo)}] {arch} x {shape} x {mesh_name} ...",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            print(f"    TIMEOUT after {args.timeout}s", flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "variant": args.variant, "status": "timeout"}) + "\n")
+            failures += 1
+            continue
+        dt = time.time() - t0
+        if r.returncode != 0:
+            tail = (r.stderr or r.stdout or "")[-2000:]
+            print(f"    FAIL ({dt:.0f}s): {tail}", flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "variant": args.variant, "status": "error",
+                    "error": tail[-500:]}) + "\n")
+            failures += 1
+        else:
+            print(f"    ok ({dt:.0f}s)", flush=True)
+    print(f"sweep done, {failures} failures", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Blocked attention with a flash-style custom VJP (pure jnp).
+
+The default jnp blocked attention differentiates *through* its
+``lax.scan``, which makes XLA stack per-(q-block, kv-block) probability
+intermediates into (nq, nk, ..., bq, bk) residual buffers — O(S^2) HBM
+traffic that dominates the memory roofline term of every dense train
+pair (see EXPERIMENTS.md §Perf).
+
+This module implements the flash-attention backward instead: the forward
+saves only (o, lse); the backward recomputes P per block-pair and
+immediately consumes it in two block passes (dq; then dk/dv).  Nothing
+of size O(S^2) ever hits HBM.  Selected with ``kernel="flash"``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = -1e30
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _mask(q_pos, k_pos, causal, window, seq_k):
+    m = k_pos[None, :] < seq_k
+    if causal:
+        m = jnp.logical_and(m, k_pos[None, :] <= q_pos[:, None])
+    if window and window > 0:
+        m = jnp.logical_and(m, k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def _fwd_blocked(q, k, v, causal, window, softcap, q_offset,
+                 bq, bk) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (o (B,Sq,H,Dv), lse (B,Sq,H))."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    qp = _pad_to(q, nq * bq, 1).reshape(B, nq, bq, KV, G, D) \
+        .transpose(1, 0, 3, 4, 2, 5)                      # (nq,B,KV,G,bq,D)
+    kp = _pad_to(k, nk * bk, 1).reshape(B, nk, bk, KV, D) \
+        .transpose(1, 0, 3, 2, 4)                         # (nk,B,KV,bk,D)
+    vp = _pad_to(v, nk * bk, 1).reshape(B, nk, bk, KV, Dv) \
+        .transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_i):
+        qi, iq = qi_i
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+        qf = qi.astype(jnp.float32)
+
+        def kv_step(carry, kj_vj_j):
+            acc, m, l = carry
+            kj, vj, jk = kj_vj_j
+            k_pos = jk * bk + jnp.arange(bk)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qf,
+                           kj.astype(jnp.float32)) * scale
+            if softcap and softcap > 0:
+                s = jnp.tanh(s / softcap) * softcap
+            msk = _mask(q_pos, k_pos, causal, window, Sk)
+            s = jnp.where(msk[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.where(msk[None, None, None], jnp.exp(s - m_new[..., None]),
+                          0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bksd->bkgqd", p, vj.astype(jnp.float32))
+            return (acc * corr[..., None] + pv, m_new, l_new), None
+
+        acc0 = jnp.zeros(qf.shape[:-1] + (Dv,), jnp.float32)
+        m0 = jnp.full(qf.shape[:-1], NEG, jnp.float32)
+        l0 = jnp.zeros(qf.shape[:-1], jnp.float32)
+        (acc, m, l), _ = lax.scan(kv_step, (acc0, m0, l0),
+                                  (kp, vp, jnp.arange(nk)))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (o, lse)
+
+    _, (ob, lseb) = lax.scan(q_step, None, (qp, jnp.arange(nq)))
+    o = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, Dv)[:, :Sq]
+    lse = lseb.transpose(1, 0, 4, 2, 3).reshape(B, nq * bq, H)[:, :Sq]
+    return o.astype(q.dtype), lse
+
+
+def _bwd_blocked(causal, window, softcap, q_offset, bq, bk, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+
+    dof = do.astype(jnp.float32)
+    Dvec = jnp.sum(dof * o.astype(jnp.float32), axis=-1)      # (B,Sq,H)
+
+    def blk_q(x, extra=()):   # (B,Sq,KV,G,...) -> (nq,B,KV,G,bq,...)
+        x = _pad_to(x, nq * bq, 1)
+        x = x.reshape((B, nq, bq, KV, G) + x.shape[3:][1:])
+        return x.transpose((1, 0, 3, 4, 2) + tuple(range(5, x.ndim)))
+
+    qb = blk_q(q.reshape(B, Sq, KV, G, D).astype(jnp.float32))
+    dob = blk_q(dof.reshape(B, Sq, KV, G, Dv))
+    lseb = blk_q(lse.reshape(B, Sq, KV, G))
+    Db = blk_q(Dvec.reshape(B, Sq, KV, G))
+    kb = _pad_to(k, nk * bk, 1).reshape(B, nk, bk, KV, D) \
+        .transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vb = _pad_to(v, nk * bk, 1).reshape(B, nk, bk, KV, Dv) \
+        .transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    def p_and_dcap(qi, kj, iq, jk):
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+        k_pos = jk * bk + jnp.arange(bk)
+        s_raw = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj) * scale
+        if softcap and softcap > 0:
+            t = jnp.tanh(s_raw / softcap)
+            s = t * softcap
+            dcap = 1.0 - t * t                 # d s_capped / d s_raw
+        else:
+            s = s_raw
+            dcap = jnp.ones_like(s_raw)
+        msk = _mask(q_pos, k_pos, causal, window, Sk)[None, None, None]
+        return jnp.where(msk, s, NEG), dcap, msk
+
+    # pass 1: dq — scan q blocks, inner scan kv blocks
+    def dq_step(_, args):
+        qi, doi, lsei, Di, iq = args
+
+        def inner(acc, kv_j):
+            kj, vj, jk = kv_j
+            s, dcap, msk = p_and_dcap(qi, kj, iq, jk)
+            p = jnp.where(msk, jnp.exp(s - lsei[..., None]), 0.0)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj)
+            ds = p * (dp - Di[..., None]) * dcap * scale
+            return acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kj), None
+
+        dq0 = jnp.zeros_like(qi)
+        dqi, _ = lax.scan(inner, dq0, (kb, vb, jnp.arange(nk)))
+        return None, dqi
+
+    _, dqb = lax.scan(dq_step, None, (qb, dob, lseb, Db, jnp.arange(nq)))
+    dq = dqb.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, D)[:, :Sq]
+
+    # pass 2: dk, dv — scan kv blocks, inner scan q blocks
+    def dkv_step(_, args):
+        kj, vj, jk = args
+
+        def inner(carry, q_i):
+            dkj, dvj = carry
+            qi, doi, lsei, Di, iq = q_i
+            s, dcap, msk = p_and_dcap(qi, kj, iq, jk)
+            p = jnp.where(msk, jnp.exp(s - lsei[..., None]), 0.0)
+            dvj = dvj + jnp.einsum("bkgqs,bkgqd->bksd", p, doi)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vj)
+            ds = p * (dp - Di[..., None]) * dcap * scale
+            dkj = dkj + jnp.einsum("bkgqs,bkgqd->bksd", ds, qi)
+            return (dkj, dvj), None
+
+        z = (jnp.zeros_like(kj), jnp.zeros_like(vj))
+        (dkj, dvj), _ = lax.scan(inner, z,
+                                 (qb, dob, lseb, Db, jnp.arange(nq)))
+        return None, (dkj, dvj)
+
+    _, (dkb, dvb) = lax.scan(dkv_step, None, (kb, vb, jnp.arange(nk)))
+    dk = dkb.transpose(1, 0, 3, 2, 4).reshape(B, nk * bk, KV, D)[:, :Sk]
+    dv = dvb.transpose(1, 0, 3, 2, 4).reshape(B, nk * bk, KV, Dv)[:, :Sk]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_jnp(q, k, v, causal=True, window=0, softcap=0.0,
+                        q_offset=0, q_block=512, kv_block=1024):
+    o, _ = _fwd_blocked(q, k, v, causal, window, softcap, q_offset,
+                        min(q_block, q.shape[1]), min(kv_block, k.shape[1]))
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, window, softcap, q_offset, q_block, kv_block):
+    bq, bk = min(q_block, q.shape[1]), min(kv_block, k.shape[1])
+    o, lse = _fwd_blocked(q, k, v, causal, window, softcap, q_offset, bq, bk)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, window, softcap, q_offset, q_block, kv_block, res, do):
+    bq = min(q_block, res[0].shape[1])
+    bk = min(kv_block, res[1].shape[1])
+    return _bwd_blocked(causal, window, softcap, q_offset, bq, bk, res, do)
+
+
+flash_attention_jnp.defvjp(_vjp_fwd, _vjp_bwd)

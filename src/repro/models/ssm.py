@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) block.  [arXiv:2405.21060]
+
+TPU adaptation: the SSD scan is computed in *chunks* so that nearly all
+FLOPs are dense einsums (MXU-friendly) — intra-chunk attention-like
+matmuls plus an inter-chunk `lax.scan` carrying the (H, P, N) state.  The
+recurrence implemented is
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+    y_t = C_t . h_t + D x_t
+
+Decode is the O(1)-per-token recurrent update (the long_500k path).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+N_GROUPS = 1  # B/C projection groups
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (pure jnp; the Pallas kernel oracle mirrors this)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """x: (B,S,H,P) f32; dt: (B,S,H) f32 (>0); A: (H,) f32 (<0);
+    Bm, Cm: (B,S,G,N) f32.  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xc = x.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bc = Bm.reshape(Bsz, nc, L, G, N)
+    Cc = Cm.reshape(Bsz, nc, L, G, N)
+
+    a = dtc * A[None, None, None, :]                    # (B,c,L,H) log-decay
+    acum = jnp.cumsum(a, axis=2)                        # inclusive cumsum
+
+    # intra-chunk: Lmat[l,s] = exp(acum[l]-acum[s]) for s<=l
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,c,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (B,c,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Ch, Bh)   # (B,c,L,L,H)
+    y_diag = jnp.einsum("bclsh,bclsh,bcsh,bcshp->bclhp",
+                        scores, lmat, dtc, xc)
+
+    # chunk-end states: sum_s exp(acum[-1]-acum[s]) dt_s B_s x_s
+    decay_st = jnp.exp(acum[:, :, -1:, :] - acum)       # (B,c,L,H)
+    states = jnp.einsum("bcshn,bcsh,bcsh,bcshp->bchpn",
+                        Bh, decay_st, dtc, xc)          # (B,c,H,P,N)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])            # (B,c,H)
+
+    # inter-chunk recurrence
+    s0 = (jnp.zeros((Bsz, H, P, N), x.dtype) if init_state is None
+          else init_state)
+
+    def step(carry, inp):
+        st_c, dec_c = inp
+        new = carry * dec_c[:, :, None, None] + st_c
+        return new, carry                               # emit state BEFORE chunk
+
+    final, prev_states = lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,c,H,P,N)
+
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Ch, prev_states, jnp.exp(acum))
+    y = (y_diag + y_off).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token recurrent update.
+    state: (B,H,P,N); x: (B,H,P); dt: (B,H); Bm, Cm: (B,G,N).
+    Returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                    # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    decay = jnp.exp(dt * A[None, :])                    # (B,H)
+    new = (state * decay[:, :, None, None]
+           + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, x))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new)
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    conv_ch = di + 2 * N_GROUPS * N
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": layers.init_dense(ks[0], d, 2 * di + 2 * N_GROUPS * N + H,
+                                  dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "w_out": layers.init_dense(ks[3], di, d, dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv.  xbc: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = N_GROUPS * s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt_raw = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def mamba_apply(p: dict, cfg, x: jnp.ndarray, kernel: str = "jnp"):
+    """Full-sequence forward.  x: (B,S,d) -> (B,S,d)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    gn = N_GROUPS * N
+
+    z, xbc, dt_raw = _split_proj(cfg, x @ p["w_in"])
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(B, S, H, s.head_dim).astype(jnp.float32)
+    Bm = xbc[..., di:di + gn].reshape(B, S, N_GROUPS, N).astype(jnp.float32)
+    Cm = xbc[..., di + gn:].reshape(B, S, N_GROUPS, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if kernel == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = layers.rms_norm_weighted(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["w_out"]
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * N_GROUPS * s.d_state),
+                          dtype),
+    }
+
+
+def mamba_decode(p: dict, cfg, x: jnp.ndarray, state: dict):
+    """One-token decode.  x: (B,1,d); state: {"ssm","conv"}."""
+    s = cfg.ssm
+    B, _, d = x.shape
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    gn = N_GROUPS * N
+
+    z, xbc, dt_raw = _split_proj(cfg, x @ p["w_in"])     # (B,1,*)
+    xbc = xbc[:, 0]
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xs = xbc_t[:, :di].reshape(B, H, s.head_dim).astype(jnp.float32)
+    Bm = xbc_t[:, di:di + gn].reshape(B, N_GROUPS, N).astype(jnp.float32)
+    Cm = xbc_t[:, di + gn:].reshape(B, N_GROUPS, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ssd_decode_step(state["ssm"], xs, dt, A, Bm, Cm)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = layers.rms_norm_weighted(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["w_out"], {"ssm": new_ssm, "conv": new_conv}

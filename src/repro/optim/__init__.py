@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.optim.schedules import constant, cosine_with_warmup
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "constant",
+           "cosine_with_warmup"]

@@ -1,0 +1,81 @@
+"""AdamW in pure JAX with fp32 master weights for low-precision params.
+
+Optimizer state per parameter: fp32 first/second moments, plus an fp32
+master copy when the parameter itself is stored in bf16 — the standard
+mixed-precision layout (2 + 4 + 4 + 4 bytes/param), which is what the
+dry-run memory analysis should reflect.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray            # ()
+    mu: Any                      # fp32 pytree
+    nu: Any                      # fp32 pytree
+    master: Any                  # fp32 pytree or None (params already fp32)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable                 # step -> lr  (or float)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        needs_master = any(p.dtype != jnp.float32
+                           for p in jax.tree.leaves(params))
+        master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                  if needs_master else None)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state).  Grads may be any float dtype."""
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip and self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip /
+                                jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        ref = state.master if state.master is not None else params
+
+        def upd(p32, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            return p32 - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                               + self.weight_decay * p32)
+
+        new_ref = jax.tree.map(
+            lambda p, m, v: upd(p.astype(jnp.float32), m, v), ref, mu, nu)
+        new_params = jax.tree.map(
+            lambda nr, p: nr.astype(p.dtype), new_ref, params)
+        new_master = new_ref if state.master is not None else None
+        return new_params, AdamWState(step, mu, nu, new_master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

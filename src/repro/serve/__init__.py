@@ -1,0 +1,4 @@
+from repro.serve.decode import (RequestBatcher, generate, make_serve_step,
+                                prefill)
+
+__all__ = ["RequestBatcher", "generate", "make_serve_step", "prefill"]

@@ -1,0 +1,84 @@
+"""Serving: prefill + autoregressive decode on top of model.decode_step.
+
+``make_serve_step`` builds the one-token decode function the decode-shape
+dry-runs lower: given a KV cache of capacity ``seq_len``, produce ONE new
+token.  ``prefill``/``generate`` drive real decoding for the examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def make_serve_step(model):
+    """serve_step(params, caches, tokens, pos) -> (next_tokens, caches).
+
+    Greedy sampling; ``pos`` is the absolute position of ``tokens``.
+    """
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = model.decode_step(params, caches, tokens, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return serve_step
+
+
+def prefill(model, params, caches, prompt: jnp.ndarray,
+            start_pos: int = 0):
+    """Feed ``prompt`` (B, S) through decode steps via scan.
+
+    Returns (caches, last_logits).
+    """
+    S = prompt.shape[1]
+
+    def step(carry, t):
+        caches = carry
+        logits, caches = model.decode_step(params, caches, prompt[:, t],
+                                           start_pos + t)
+        return caches, logits
+
+    caches, logits_seq = lax.scan(step, caches, jnp.arange(S))
+    return caches, logits_seq[-1]
+
+
+def generate(model, params, prompt: jnp.ndarray, n_new: int,
+             capacity: Optional[int] = None,
+             cache_dtype=None) -> jnp.ndarray:
+    """Greedy generation: returns (B, n_new) new tokens."""
+    B, S = prompt.shape
+    cap = capacity or (S + n_new)
+    caches = model.init_cache(B, cap, cache_dtype)
+    caches, last_logits = prefill(model, params, caches, prompt)
+    tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    def step(carry, i):
+        tok, caches = carry
+        logits, caches = model.decode_step(params, caches, tok, S + i)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, caches), tok
+
+    (_, _), toks = lax.scan(step, (tok0, caches), jnp.arange(n_new))
+    return toks.T                                   # (B, n_new)
+
+
+class RequestBatcher:
+    """Minimal static-batch server: pads requests to a fixed batch and
+    decodes them together (the serving example's front-end)."""
+
+    def __init__(self, model, params, batch_size: int, capacity: int):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.capacity = capacity
+
+    def serve(self, prompts, n_new: int):
+        """prompts: list of 1-D int arrays (same length for simplicity)."""
+        assert len(prompts) <= self.batch_size
+        S = len(prompts[0])
+        pad = self.batch_size - len(prompts)
+        batch = jnp.stack(list(prompts)
+                          + [jnp.zeros((S,), jnp.int32)] * pad)
+        out = generate(self.model, self.params, batch, n_new,
+                       capacity=self.capacity)
+        return [out[i] for i in range(len(prompts))]

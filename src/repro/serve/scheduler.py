@@ -1,0 +1,134 @@
+"""Continuous-batching request scheduler over the decode path.
+
+vLLM-style token-level scheduling at laptop scale: a fixed pool of batch
+lanes, each independently holding one request's progress against the
+shared KV/state cache.  Every tick is ONE fused ``decode_step`` in which
+each lane consumes its own next token at its own position — prompt
+tokens while prefilling, generated tokens afterwards (the model's decode
+path supports per-lane positions for exactly this).  New requests join
+free lanes between ticks; finished requests free their lane immediately
+— no head-of-line blocking on the longest request in the batch.
+
+This is the serving-side counterpart of Unicron's elasticity story: the
+scheduler tolerates lane-level failure (a poisoned request is evicted
+and its lane recycled) without touching the other lanes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: jnp.ndarray                 # (S,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    eos: Optional[int] = None
+
+
+@dataclass
+class _Lane:
+    req: Optional[Request] = None
+    pos: int = 0                        # position of the NEXT token to feed
+    pending: int = 0                    # that token's id
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatcher:
+    """Schedules requests over ``batch_size`` decode lanes."""
+
+    def __init__(self, model, params, batch_size: int, capacity: int):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.capacity = capacity
+        self.lanes = [_Lane() for _ in range(batch_size)]
+        self.caches = model.init_cache(batch_size, capacity)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+
+    # ---- client API --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        while (self.queue or any(not ln.free for ln in self.lanes)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    # ---- scheduler core ----------------------------------------------------
+
+    def _admit(self) -> None:
+        for i, lane in enumerate(self.lanes):
+            if not lane.free or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self._reset_lane(i)
+            lane.req = req
+            lane.pos = 0
+            lane.pending = int(req.prompt[0])
+
+    def _reset_lane(self, i: int) -> None:
+        """Zero lane i of every cache leaf (the leaf dim whose size is
+        the batch size is the lane dim)."""
+        def zero_lane(leaf):
+            for axis, n in enumerate(leaf.shape):
+                if n == self.batch_size:
+                    return leaf.at[(slice(None),) * axis + (i,)].set(0)
+            return leaf
+        self.caches = jax.tree.map(zero_lane, self.caches)
+
+    def step(self) -> None:
+        self._admit()
+        if all(ln.free for ln in self.lanes):
+            return
+        toks = jnp.asarray([ln.pending for ln in self.lanes], jnp.int32)
+        poss = jnp.asarray([ln.pos for ln in self.lanes], jnp.int32)
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           toks, poss)
+        nxt = jnp.argmax(logits, axis=-1)
+        for i, lane in enumerate(self.lanes):
+            if lane.free:
+                continue
+            req = lane.req
+            fed = lane.pos
+            lane.pos += 1
+            if fed < req.prompt.shape[0] - 1:
+                lane.pending = int(req.prompt[fed + 1])   # still prefilling
+                continue
+            tok = int(nxt[i])                             # generated token
+            req.out.append(tok)
+            lane.pending = tok
+            if len(req.out) >= req.max_new \
+                    or (req.eos is not None and tok == req.eos) \
+                    or lane.pos >= self.capacity - 1:
+                req.done = True
+                self.finished.append(req)
+                lane.req = None
+        self.steps += 1
+
+    # ---- failure handling ----------------------------------------------------
+
+    def evict(self, req_id: int) -> bool:
+        """Lane-level recovery: drop a poisoned request, recycle the
+        lane; other lanes are untouched."""
+        for lane in self.lanes:
+            if lane.req is not None and lane.req.req_id == req_id:
+                lane.req.done = True
+                self.finished.append(lane.req)
+                lane.req = None
+                return True
+        return False

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (batch_specs, cache_specs, data_axes_of,
+                                  opt_specs, param_spec, param_specs,
+                                  to_named, train_state_specs, zero1_spec)
+
+__all__ = ["batch_specs", "cache_specs", "data_axes_of", "opt_specs",
+           "param_spec", "param_specs", "to_named", "train_state_specs",
+           "zero1_spec"]

@@ -1,0 +1,245 @@
+"""Named-sharding rules for every architecture.
+
+The rules are *path-driven*: each parameter leaf's dict path (``wq``,
+``w_out``, ``moe/w_in``, ...) selects which logical dimension is sharded
+over the ``model`` mesh axis, with divisibility fallbacks (GQA KV heads of
+8 don't divide a 16-wide model axis, so ``wk``/``wv`` fall back to the
+input d_model dim — Megatron-style KV replication expressed as GSPMD
+input-dim sharding).  Leading stack dims (the ``lax.scan`` layer axis)
+are always unsharded, so every rule indexes from the *end* of the shape.
+
+Optimizer state (mu/nu/master) additionally gets ZeRO-1 style sharding of
+its largest unsharded dim over the data axes, which is what makes the
+0.7T-class configs' 12-byte/param optimizer state fit per chip.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# Path helpers
+# ---------------------------------------------------------------------------
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            names.append(f"[{entry.idx}]")
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+    return tuple(names)
+
+
+def _dict_names(names: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(n for n in names if not n.startswith("["))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# leaf name -> preferred negative dims to shard over the model axis,
+# tried in order until one divides.
+_PREFER_LAST = ("wq", "w_uq", "w_dq", "w_dkv", "w_uk", "w_uv",
+                "w_in", "w_gate", "conv_w", "conv_b", "gate_norm")
+_PREFER_SECOND = ("wo", "w_out")
+_KV = ("wk", "wv")
+_REPLICATED = ("router", "dt_bias", "A_log", "D", "scale", "bias",
+               "q_norm", "k_norm", "kv_norm")
+
+
+def param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+               model_size: int, model_axis: str = "model") -> P:
+    """PartitionSpec for one parameter leaf."""
+    dnames = _dict_names(names)
+    last = dnames[-1] if dnames else ""
+    parent = dnames[-2] if len(dnames) > 1 else ""
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def try_dims(*negs: int) -> bool:
+        for neg in negs:
+            d = nd + neg
+            if 0 <= d < nd and shape[d] % model_size == 0 and shape[d] > 1:
+                spec[d] = model_axis
+                return True
+        return False
+
+    if last == "w" and parent in ("embed", "head"):
+        try_dims(-2, -1)                    # vocab, else d_model
+    elif parent == "moe" and last in ("w_in", "w_gate", "w_out") and nd >= 3:
+        # (E, d, f) / (E, f, d): expert-parallel when E divides, else d_ff
+        if last == "w_out":
+            try_dims(-3, -2)
+        else:
+            try_dims(-3, -1)
+    elif last in _REPLICATED:
+        pass
+    elif last in _PREFER_LAST:
+        try_dims(-1, -2)
+    elif last in _PREFER_SECOND:
+        try_dims(-2, -1)
+    elif last in _KV:
+        try_dims(-1, -2)
+    # everything else stays replicated
+    return P(*spec)
+
+
+def param_specs(params_shape: Any, model_size: int,
+                model_axis: str = "model") -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return param_spec(_path_names(path), leaf.shape, model_size,
+                          model_axis)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], data_axes: Tuple[str, ...],
+               data_size: int) -> P:
+    """Additionally shard the largest unsharded dim over the data axes
+    (ZeRO-1 optimizer-state partitioning)."""
+    if len(shape) < 2:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    cands = sorted((s, i) for i, s in enumerate(shape)
+                   if parts[i] is None and s % data_size == 0 and s > 1)
+    if not cands:
+        return spec
+    _, dim = cands[-1]
+    parts[dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*parts)
+
+
+def opt_specs(params_shape: Any, pspecs: Any, data_axes: Tuple[str, ...],
+              data_size: int) -> Any:
+    def one(leaf, spec):
+        return zero1_spec(spec, leaf.shape, data_axes, data_size)
+    return jax.tree.map(one, params_shape, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape: Any, data_axes: Tuple[str, ...],
+                data_size: int, *, stacked: bool) -> Any:
+    """Shard the batch dim over the data axes.  ``stacked``: leaves carry a
+    leading (n_micro,) scan dim before the batch dim."""
+    bdim = 1 if stacked else 0
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if nd > bdim and leaf.shape[bdim] % data_size == 0 \
+                and leaf.shape[bdim] > 1:
+            parts[bdim] = da
+        return P(*parts)
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, data_axes: Tuple[str, ...],
+                data_size: int, model_size: int, *,
+                shard_seq: bool = False, kv_model: bool = False) -> Any:
+    """Decode-cache sharding.
+
+    Default: batch dim (axis -4 for k/v, first post-stack dim generally)
+    over data.  ``shard_seq``: long-context mode — batch is 1, so the
+    attention caches' capacity dim is sharded over data instead
+    (flash-decoding style), and SSM state heads go over model.
+    """
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(path, leaf):
+        names = _dict_names(_path_names(path))
+        last = names[-1] if names else ""
+        nd = len(leaf.shape)
+        parts: list = [None] * nd
+
+        def set_neg(neg, axis, size):
+            d = nd + neg
+            if 0 <= d < nd and parts[d] is None \
+                    and leaf.shape[d] % size == 0 and leaf.shape[d] > 1:
+                parts[d] = axis
+                return True
+            return False
+
+        if last in ("k", "v"):                    # (..., B, C, KV, D)
+            if not set_neg(-4, da, data_size) and shard_seq:
+                pass
+            if shard_seq and parts[nd - 3] is None:
+                set_neg(-3, da, data_size)
+            if not set_neg(-2, "model", model_size) and kv_model:
+                # kv heads don't divide: shard capacity over model
+                # (flash-decoding style residency fix)
+                set_neg(-3, "model", model_size)
+        elif last in ("ckv", "k_rope"):           # (..., B, C, r)
+            if not set_neg(-3, da, data_size) and shard_seq:
+                pass
+            if shard_seq and parts[nd - 2] is None:
+                set_neg(-2, da, data_size)
+            if kv_model and parts[nd - 2] is None:
+                set_neg(-2, "model", model_size)
+        elif last == "ssm":                       # (..., B, H, P, N)
+            set_neg(-4, da, data_size)
+            set_neg(-3, "model", model_size)
+        elif last == "conv":                      # (..., B, K, C)
+            set_neg(-3, da, data_size)
+            set_neg(-1, "model", model_size)
+        return P(*parts)
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Assembled sharding bundles
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(state_shape, mesh: Mesh, *,
+                      fsdp: bool = False) -> Any:
+    """Sharding spec tree for a TrainState (params + AdamW state).
+
+    ``fsdp``: additionally shard the PARAMETERS over the data axes
+    (ZeRO-3 style; XLA inserts the per-layer all-gathers).  Required for
+    0.5T+ models whose bf16 weights alone exceed per-chip HBM under
+    model-axis-only sharding.
+    """
+    axes = mesh.axis_names
+    model_size = mesh.shape["model"]
+    data_axes = tuple(a for a in axes if a != "model")
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+
+    pspecs = param_specs(state_shape.params, model_size)
+    ospecs = opt_specs(state_shape.params, pspecs, data_axes, data_size)
+    if fsdp:
+        pspecs = ospecs
+    mu = ospecs
+    nu = ospecs
+    master = None if state_shape.opt.master is None else ospecs
+    opt = type(state_shape.opt)(step=P(), mu=mu, nu=nu, master=master)
+    return type(state_shape)(params=pspecs, opt=opt, step=P())
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[Tuple[str, ...], int]:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return axes, size

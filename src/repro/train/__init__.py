@@ -1,0 +1,8 @@
+from repro.train.state import (TrainState, abstract_train_state,
+                               init_train_state)
+from repro.train.step import (accumulate, finalize_step, make_grad_fn,
+                              make_loss_fn, make_train_step)
+
+__all__ = ["TrainState", "init_train_state", "abstract_train_state",
+           "make_train_step", "make_grad_fn", "make_loss_fn", "accumulate",
+           "finalize_step"]

@@ -1,0 +1,28 @@
+"""Train state container."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray          # () int32 — completed optimizer steps
+
+
+def init_train_state(model, optimizer: AdamW, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model, optimizer: AdamW) -> TrainState:
+    """ShapeDtypeStruct train state — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(model, optimizer, k),
+        jax.random.PRNGKey(0))

@@ -1,0 +1,103 @@
+"""Training steps.
+
+Two execution paths with *identical semantics* (tested):
+
+* **Fused** (`make_train_step`): one jitted function scanning over
+  micro-batches, accumulating gradients, then applying the optimizer.
+  This is the production pjit-lowered step used by the dry-run.
+
+* **Resumable** (`make_grad_fn` + `finalize_step`): per-micro-batch
+  gradient calls with an explicit accumulator the caller owns.  Unicron's
+  micro-batch scheduler (core/resumption.py) drives this path so that a
+  mid-iteration failure can resume from partial results (§6.2, Eq. 7).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.optim import AdamW, global_norm
+from repro.train.state import TrainState
+
+
+def make_loss_fn(model, kernel: str = "jnp", remat: bool = False):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, kernel=kernel, remat=remat)
+    return loss_fn
+
+
+def make_grad_fn(model, kernel: str = "jnp", remat: bool = False):
+    """Per-micro-batch gradient: (params, micro_batch) -> (grads, metrics).
+
+    Gradients are returned as *sums-compatible* means over the micro-batch
+    (mean over tokens inside, so accumulation across micro-batches is a
+    plain sum divided by the count — Eq. 6/7 algebra).
+    """
+    loss_fn = make_loss_fn(model, kernel, remat)
+
+    @jax.jit
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+    return grad_fn
+
+
+def accumulate(acc, grads):
+    """Add grads into the accumulator pytree (fp32)."""
+    if acc is None:
+        return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    return jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _finalize(optimizer: AdamW, state: TrainState, grad_sum, count):
+    grads = jax.tree.map(lambda g: g / count, grad_sum)
+    params, opt = optimizer.update(grads, state.opt, state.params)
+    return TrainState(params, opt, state.step + 1), global_norm(grads)
+
+
+def finalize_step(optimizer: AdamW, state: TrainState, grad_sum,
+                  count: int) -> Tuple[TrainState, jnp.ndarray]:
+    """Apply the accumulated (summed) gradients of ``count`` micro-batches."""
+    return _finalize(optimizer, state, grad_sum,
+                     jnp.asarray(count, jnp.float32))
+
+
+def make_train_step(model, optimizer: AdamW, n_micro: int,
+                    kernel: str = "jnp", remat: bool = False) -> Callable:
+    """Fused production step.
+
+    ``batch`` must be stacked for scan: every leaf has leading dims
+    (n_micro, micro_batch, ...) — see data.stack_microbatches.
+    Returns (state, metrics) with metrics averaged over micro-batches.
+    """
+    loss_fn = make_loss_fn(model, kernel, remat)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def mb_step(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        if n_micro == 1:
+            acc, metrics = mb_step(zeros, jax.tree.map(
+                lambda a: a[0], batch))
+            metrics = jax.tree.map(lambda m: m[None], metrics)
+        else:
+            acc, metrics = lax.scan(mb_step, zeros, batch)
+        grads = jax.tree.map(lambda g: g / n_micro, acc)
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        out_metrics = jax.tree.map(jnp.mean, metrics)
+        out_metrics["grad_norm"] = global_norm(grads)
+        return TrainState(params, opt, state.step + 1), out_metrics
+
+    return train_step

@@ -1,0 +1,95 @@
+"""Control-loop integration: agents -> KV store -> coordinator decisions."""
+import pytest
+
+from repro.configs import get_arch
+from repro.core.agent import UnicronAgent
+from repro.core.cluster import Cluster
+from repro.core.controlloop import ControlLoop
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.costmodel import A800, TaskModel
+from repro.core.detection import ErrorKind
+from repro.core.handling import Action
+from repro.core.kvstore import KVStore
+from repro.core.waf import Task
+
+
+@pytest.fixture
+def loop():
+    tasks = [Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                            global_batch=64)),
+             Task(model=TaskModel.from_arch(get_arch("gpt3-7b"),
+                                            global_batch=64))]
+    kv = KVStore()
+    coord = UnicronCoordinator(tasks, [32, 96], A800, kv=kv)
+    cluster = Cluster(n_nodes=16, gpus_per_node=8)
+    cluster.assign([32, 96])
+    agents = {i: UnicronAgent(i, kv) for i in range(16)}
+    return ControlLoop(coord, cluster, agents), agents, cluster, coord
+
+
+def test_heartbeat_loss_triggers_reconfigure(loop):
+    cl, agents, cluster, coord = loop
+    for a in agents.values():
+        a.heartbeat(now=0.0)
+    assert cl.tick(now=3.0) == []                 # all alive
+    agents[5].kill()
+    for i, a in agents.items():
+        a.heartbeat(now=4.0)                      # 5 is dead: no refresh
+    events = cl.tick(now=8.0)                     # 5's lease (0+6s) lapsed;
+                                                  # others live until 10
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.node == 5 and ev.kind is ErrorKind.LOST_CONNECTION
+    assert ev.action is Action.RECONFIGURE
+    assert sum(ev.plan) <= cluster.healthy_workers()
+    assert not cluster.nodes[5].healthy
+
+
+def test_inband_report_respects_detection_latency(loop):
+    cl, agents, cluster, coord = loop
+    agents[2].report(ErrorKind.CUDA_ERROR, now=100.0)      # visible at 100.3
+    assert cl.tick(now=100.1) == []               # not yet visible
+    events = cl.tick(now=100.5)
+    assert len(events) == 1
+    assert events[0].action is Action.RESTART     # SEV2
+    assert cluster.nodes[2].healthy               # no drain for SEV2
+
+
+def test_sev3_reattempt_then_escalation(loop):
+    cl, agents, cluster, coord = loop
+    agents[1].report(ErrorKind.CONNECTION_REFUSED, now=0.0)
+    events = cl.tick(now=2.0)                     # visible at +1.8 s
+    assert events[0].action is Action.REATTEMPT   # SEV3
+    # reattempt fails -> SEV2 restart; fails again -> SEV1 reconfigure
+    ev = cl.action_failed(now=2.0, node=1,
+                          kind=ErrorKind.CONNECTION_REFUSED)
+    assert ev.action is Action.RECONFIGURE or ev.action is Action.RESTART
+
+
+def test_repair_rejoins_and_replans(loop):
+    cl, agents, cluster, coord = loop
+    for a in agents.values():
+        a.heartbeat(now=0.0)
+    agents[7].kill()
+    for a in agents.values():
+        if a.alive:
+            a.heartbeat(now=4.0)
+    cl.tick(now=8.0)                              # node 7 drained
+    assert not cluster.nodes[7].healthy
+    before = cluster.healthy_workers()
+    for a in agents.values():
+        if a.alive:
+            a.heartbeat(now=8.0)                  # leases live until 14
+    cluster.nodes[7].repair_done_at = 10.0        # repaired early
+    events = cl.tick(now=12.0)
+    assert any(e.action is Action.RESUME for e in events)
+    assert cluster.healthy_workers() == before + 8
+    assert agents[7].alive
+
+
+def test_duplicate_reports_deduplicated(loop):
+    cl, agents, cluster, coord = loop
+    agents[3].report(ErrorKind.NCCL_TIMEOUT, now=0.0)
+    n1 = len(cl.tick(now=200.0))
+    n2 = len(cl.tick(now=300.0))
+    assert n1 == 1 and n2 == 0

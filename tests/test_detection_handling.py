@@ -1,0 +1,110 @@
+"""Error detection (§4.1, Table 1/2) and handling workflow (§4.2, Fig. 7)."""
+import pytest
+
+from repro.core.agent import UnicronAgent
+from repro.core.detection import (BASELINE_TIMEOUT_S, ERROR_TABLE, ErrorKind,
+                                  Method, OnlineStatMonitor, Severity,
+                                  classify, detection_time)
+from repro.core.handling import (Action, FailureCase, Trigger, action_for,
+                                 decide, escalate)
+from repro.core.kvstore import KVStore
+
+
+def test_table1_complete():
+    """Every error status has a detection method + severity (Table 1)."""
+    assert len(ERROR_TABLE) == len(ErrorKind)
+    m, s = classify(ErrorKind.LOST_CONNECTION)
+    assert m is Method.NODE_HEALTH and s is Severity.SEV1
+    m, s = classify(ErrorKind.NCCL_TIMEOUT)
+    assert m is Method.STATISTICAL and s is Severity.SEV3
+    m, s = classify(ErrorKind.CUDA_ERROR)
+    assert m is Method.EXCEPTION and s is Severity.SEV2
+
+
+def test_detection_times_table2():
+    """Unicron detects in seconds; the baseline waits for the 30-minute
+    NCCL watchdog for everything but node loss (Table 2)."""
+    avg_iter = 30.0
+    assert detection_time(ErrorKind.LOST_CONNECTION, avg_iter) == \
+        pytest.approx(5.6)
+    assert detection_time(ErrorKind.EXITED_ABNORMALLY, avg_iter) == \
+        pytest.approx(1.8)
+    assert detection_time(ErrorKind.CUDA_ERROR, avg_iter) == pytest.approx(0.3)
+    assert detection_time(ErrorKind.TASK_HANG, avg_iter) == \
+        pytest.approx(3 * avg_iter)
+    for kind in (ErrorKind.EXITED_ABNORMALLY, ErrorKind.CUDA_ERROR,
+                 ErrorKind.TASK_HANG):
+        assert detection_time(kind, avg_iter, unicron=False) == \
+            BASELINE_TIMEOUT_S
+    assert detection_time(ErrorKind.LOST_CONNECTION, avg_iter,
+                          unicron=False) == pytest.approx(5.7)
+
+
+def test_online_stat_monitor_thresholds():
+    """Fig. 6: degraded above 1.1x average, failed above 3x."""
+    mon = OnlineStatMonitor()
+    assert mon.status(100.0) == "ok"          # no history yet
+    for _ in range(10):
+        mon.observe(10.0)
+    assert mon.status(10.5) == "ok"
+    assert mon.status(12.0) == "degraded"
+    assert mon.status(29.9) == "degraded"
+    assert mon.status(30.1) == "failed"
+
+
+def test_severity_to_action_mapping():
+    assert action_for(Severity.SEV3) is Action.REATTEMPT
+    assert action_for(Severity.SEV2) is Action.RESTART
+    assert action_for(Severity.SEV1) is Action.RECONFIGURE
+
+
+def test_escalation_chain():
+    """Fig. 7: SEV3 -> SEV2 -> SEV1 on repeated action failure."""
+    case = FailureCase.from_kind(ErrorKind.CONNECTION_REFUSED)
+    assert case.severity is Severity.SEV3
+    assert case.next_action() is Action.REATTEMPT
+    case.record_failure()
+    assert case.severity is Severity.SEV2
+    assert case.next_action() is Action.RESTART
+    case.record_failure()
+    assert case.severity is Severity.SEV1
+    d = decide(case)
+    assert d.action is Action.RECONFIGURE
+    assert d.isolate_node and d.replan_all_tasks
+    case.record_failure()                     # SEV1 stays SEV1
+    assert case.severity is Severity.SEV1
+
+
+def test_agent_heartbeat_lease_expiry():
+    """Node loss = heartbeat lease expiry in the status monitor -> SEV1."""
+    kv = KVStore()
+    agent = UnicronAgent(node_id=3, kv=kv)
+    agent.heartbeat(now=0.0)
+    assert kv.get("/nodes/3/alive") == 0.0
+    assert kv.expire(now=3.0) == []           # TTL 6s: still alive
+    agent.kill()
+    dead = kv.expire(now=7.0)
+    assert "/nodes/3/alive" in dead
+
+
+def test_agent_inband_report_latency():
+    kv = KVStore()
+    agent = UnicronAgent(node_id=0, kv=kv)
+    rec = agent.report(ErrorKind.CUDA_ERROR, now=100.0)
+    assert rec["visible_at"] == pytest.approx(100.3)
+    assert rec["severity"] == int(Severity.SEV2)
+    assert kv.prefix("/errors/0/")
+
+
+def test_kvstore_watch_and_cas():
+    kv = KVStore()
+    seen = []
+    kv.watch("/a/", lambda op, k, v: seen.append((op, k)))
+    kv.put("/a/x", 1)
+    kv.put("/b/y", 2)
+    kv.delete("/a/x")
+    assert seen == [("put", "/a/x"), ("delete", "/a/x")]
+    kv.put("/c", "old")
+    assert kv.cas("/c", "old", "new")
+    assert not kv.cas("/c", "old", "newer")
+    assert kv.get("/c") == "new"

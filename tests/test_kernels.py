@@ -1,0 +1,277 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, Sq, Sk, H, KV, D, causal, window, softcap
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0),      # GQA causal
+    (1, 100, 100, 4, 1, 32, True, 0, 0.0),      # MQA, ragged seq
+    (2, 64, 64, 8, 8, 16, True, 16, 0.0),       # sliding window
+    (1, 256, 256, 2, 2, 64, False, 0, 0.0),     # bidirectional (hubert)
+    (1, 96, 96, 4, 2, 64, True, 0, 30.0),       # logit softcap (gemma)
+    (1, 64, 192, 2, 2, 32, True, 0, 0.0),       # cross-length (q_offset)
+]
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,KV,D,causal,window,softcap", ATTN_CASES)
+def test_flash_attention_matches_oracle(B, Sq, Sk, H, KV, D, causal,
+                                        window, softcap):
+    ks = jax.random.split(jax.random.fold_in(KEY, Sq * Sk + H), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KV, D))
+    v = jax.random.normal(ks[2], (B, Sk, KV, D))
+    off = Sk - Sq
+    got = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              softcap=softcap, q_offset=off,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=off)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    got = flash_attention_fwd(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v)
+    assert got.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 64), (128, 128)])
+def test_flash_attention_block_shape_invariance(block_q, block_k):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 80, 2, 32))
+    k = jax.random.normal(ks[1], (1, 80, 2, 32))
+    v = jax.random.normal(ks[2], (1, 80, 2, 32))
+    got = flash_attention_fwd(q, k, v, block_q=block_q, block_k=block_k)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_oracle_grad():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 48, 2, 16))
+    k = jax.random.normal(ks[1], (1, 48, 2, 16))
+    v = jax.random.normal(ks[2], (1, 48, 2, 16))
+    g1 = jax.grad(lambda q: jnp.sum(ops.flash_attention(q, k, v) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(ref.flash_attention(q, k, v) ** 2))(q)
+    np.testing.assert_allclose(g1, g2, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk
+    (2, 64, 4, 16, 1, 8, 16),
+    (1, 100, 2, 32, 1, 16, 32),      # ragged
+    (1, 128, 4, 8, 2, 8, 128),       # multi-group, single chunk
+    (2, 37, 2, 8, 1, 4, 16),         # S < 2 chunks, ragged
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", SSD_CASES)
+def test_ssd_scan_matches_oracle(B, S, H, P, G, N, chunk):
+    ks = jax.random.split(jax.random.fold_in(KEY, S * H + P), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y, fin = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, finr = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(fin, finr, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_matches_serial_recurrence():
+    """Second-level oracle: token-serial SSM recurrence."""
+    from repro.models.ssm import ssd_decode_step
+    B, S, H, P, N = 1, 24, 2, 4, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    y, fin = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=8)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        yt, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                    Bm[:, t], Cm[:, t])
+        ys.append(yt)
+    y_serial = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y, y_serial, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(fin, state, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    B, S, H, P, N = 1, 96, 2, 8, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    y16, _ = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=16)
+    y48, _ = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=48)
+    np.testing.assert_allclose(y16, y48, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 32), (2, 17, 96), (1, 5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape).astype(dtype)
+    s = jax.random.normal(ks[1], (shape[-1],)).astype(dtype)
+    got = rmsnorm_fwd(x, s, block_rows=8)
+    want = ref.rmsnorm(x, s)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=2e-2
+                               if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_rmsnorm_grad():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (6, 32))
+    s = jax.random.normal(ks[1], (32,))
+    g1 = jax.grad(lambda x, s: jnp.sum(ops.rmsnorm(x, s) ** 2), (0, 1))(x, s)
+    g2 = jax.grad(lambda x, s: jnp.sum(ref.rmsnorm(x, s) ** 2), (0, 1))(x, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end kernel path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-780m", "gemma3-12b"])
+def test_pallas_path_matches_jnp_path(arch):
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import build_model
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticLM(cfg, seq_len=64, global_batch=2).batch(0)
+    l1, _ = model.loss(params, batch, kernel="jnp")
+    l2, _ = model.loss(params, batch, kernel="pallas")
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# flash custom-VJP blocked attention (perf variant "flash")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,causal,window,softcap",
+    [(2, 128, 4, 2, 64, True, 0, 0.0),
+     (1, 100, 4, 1, 32, True, 0, 0.0),
+     (2, 64, 8, 8, 16, True, 16, 0.0),
+     (1, 96, 4, 2, 64, True, 0, 30.0)])
+def test_flash_vjp_matches_oracle(B, S, H, KV, D, causal, window, softcap):
+    from repro.models.flash_vjp import flash_attention_jnp
+    ks = jax.random.split(jax.random.fold_in(KEY, S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+
+    def f(q, k, v):
+        return flash_attention_jnp(q, k, v, causal, window, softcap, 0,
+                                   32, 32)
+
+    def r(q, k, v):
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=0)
+
+    np.testing.assert_allclose(f(q, k, v), r(q, k, v), atol=2e-5, rtol=2e-5)
+    g1 = jax.grad(lambda q, k, v: jnp.sum(f(q, k, v) ** 2), (0, 1, 2))(
+        q, k, v)
+    g2 = jax.grad(lambda q, k, v: jnp.sum(r(q, k, v) ** 2), (0, 1, 2))(
+        q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-4)
+
+
+def test_flash_kernel_path_end_to_end():
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import build_model
+    for arch in ("qwen3-4b", "deepseek-v3-671b"):
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = SyntheticLM(cfg, seq_len=64, global_batch=2).batch(0)
+        l1, _ = model.loss(params, batch, kernel="jnp")
+        l2, _ = model.loss(params, batch, kernel="flash")
+        assert abs(float(l1) - float(l2)) < 1e-4, arch
+
+
+def test_moe_shardmap_matches_reference():
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import moe
+    from repro.models.model import build_model
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticLM(cfg, seq_len=32, global_batch=2).batch(0)
+    l_ref, _ = model.loss(params, batch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    moe.SHARD_MAP = (mesh, ("data",))
+    try:
+        l_sm, _ = model.loss(params, batch)
+        g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    finally:
+        moe.SHARD_MAP = None
+    assert abs(float(l_ref) - float(l_sm)) < 1e-5
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_moe_dispatch_3d_matches_flat():
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import moe
+    from repro.models.model import build_model
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticLM(cfg, seq_len=32, global_batch=2).batch(0)
+    l_flat, _ = model.loss(params, batch)
+    moe.DISPATCH_3D = True
+    try:
+        l_3d, _ = model.loss(params, batch)
+    finally:
+        moe.DISPATCH_3D = False
+    assert abs(float(l_flat) - float(l_3d)) < 1e-6

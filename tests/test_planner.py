@@ -1,0 +1,110 @@
+"""Plan-generation tests (§5): WAF model, DP solver vs brute force,
+lookup table, and the cost model's Figure-4 phenomenology."""
+import pytest
+
+from repro.configs import get_arch
+from repro.core import costmodel, planner, waf
+from repro.core.costmodel import A800, TPU_V5E, TaskModel
+from repro.core.planner import PlanInput, PlanTable
+from repro.core.waf import Task
+
+
+def _task(size="gpt3-1.3b", weight=1.0, seq=2048, gb=256):
+    cfg = get_arch(size)
+    return Task(model=TaskModel.from_arch(cfg, seq_len=seq, global_batch=gb),
+                weight=weight)
+
+
+def _inp(tasks, assignment, n, d_run=3600.0, d_tr=120.0, faulted=None):
+    faulted = faulted or (False,) * len(tasks)
+    return PlanInput(tuple(tasks), tuple(assignment), n, d_run, d_tr,
+                     tuple(faulted))
+
+
+def test_waf_zero_below_necessary():
+    t = _task("gpt3-7b")
+    floor = t.necessary(A800)
+    assert floor >= 1
+    assert waf.waf(t, floor - 1, A800) == 0.0
+    assert waf.waf(t, floor, A800) > 0.0
+
+
+def test_waf_scales_with_weight():
+    t1 = _task(weight=1.0)
+    t2 = _task(weight=2.0)
+    x = max(t1.necessary(A800), 8)
+    assert waf.waf(t2, x, A800) == pytest.approx(2 * waf.waf(t1, x, A800))
+
+
+def test_dp_matches_brute_force():
+    tasks = [_task("gpt3-1.3b"), _task("gpt3-1.3b", weight=1.5),
+             _task("gpt3-7b")]
+    inp = _inp(tasks, [4, 4, 8], 12)
+    got = planner.solve(inp, A800)
+    want = planner.brute_force(inp, A800)
+    assert got.total_reward == pytest.approx(want.total_reward, rel=1e-9)
+    assert sum(got.assignment) <= inp.n_workers
+
+
+def test_penalty_discourages_reconfiguring_healthy_tasks():
+    """With a large transition cost, the planner keeps healthy tasks at
+    their current assignment (Eq. 3 penalty term)."""
+    tasks = [_task(), _task()]
+    inp_cheap = _inp(tasks, [8, 8], 16, d_run=10 * 86400.0, d_tr=1.0)
+    inp_dear = _inp(tasks, [8, 8], 16, d_run=600.0, d_tr=3000.0)
+    dear = planner.solve(inp_dear, A800)
+    assert dear.assignment == (8, 8)        # stay put: penalty dominates
+    cheap = planner.solve(inp_cheap, A800)
+    assert sum(cheap.assignment) <= 16
+
+
+def test_plan_table_lookup_consistency():
+    tasks = [_task("gpt3-1.3b"), _task("gpt3-7b")]
+    assignment = [8, 24]
+    table = PlanTable(tasks, assignment, A800, d_running=3600.0,
+                      d_transition=120.0, workers_per_fault=8)
+    hit = table.lookup("fault:0")
+    assert hit is not None
+    fresh = planner.solve(
+        _inp(tasks, assignment, sum(assignment) - 8,
+             faulted=(True, False)), A800)
+    assert hit.total_reward == pytest.approx(fresh.total_reward, rel=1e-9)
+    assert table.lookup("join:1") is not None
+    assert table.lookup("finish:1") is not None
+    assert table.lookup("nonsense") is None
+
+
+def test_costmodel_nonlinear_figure4():
+    """T(t, x) is monotone-ish but the achieved-FLOP/s *ratio* is not:
+    awkward worker counts force worse parallelism configs (Fig. 4)."""
+    t = TaskModel.from_arch(get_arch("gpt3-7b"), seq_len=2048,
+                            global_batch=256)
+    xs = list(range(8, 129, 8))
+    ratios = [costmodel.flops_ratio(t, x, A800) for x in xs]
+    assert all(0 <= r <= 1 for r in ratios)
+    # non-monotonic ratio somewhere (the Fig. 4 dip)
+    diffs = [b - a for a, b in zip(ratios, ratios[1:])]
+    assert any(d < 0 for d in diffs), ratios
+
+
+def test_costmodel_feasibility_floor():
+    """Big models are infeasible on tiny clusters (memory), giving the
+    T_necessary requirement floor."""
+    big = TaskModel.from_arch(get_arch("gpt3-175b"), global_batch=256)
+    assert costmodel.achieved_flops(big, 1, A800) == 0.0
+    floor = costmodel.min_feasible_workers(big, A800)
+    assert floor > 8
+    assert costmodel.achieved_flops(big, floor, A800) > 0.0
+
+
+def test_costmodel_tpu_preset():
+    t = TaskModel.from_arch(get_arch("qwen3-4b"), global_batch=256)
+    a = costmodel.achieved_flops(t, 64, TPU_V5E)
+    assert a > 0
+    assert a <= 64 * TPU_V5E.peak_flops
+
+
+def test_expected_run_duration_shrinks_with_cluster():
+    d1 = waf.expected_run_duration(64, 30 * 86400.0)
+    d2 = waf.expected_run_duration(128, 30 * 86400.0)
+    assert d2 < d1

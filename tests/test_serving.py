@@ -1,0 +1,74 @@
+"""Serving-layer tests: batched generation + continuous batching."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+from repro.serve.decode import RequestBatcher, generate
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_continuous_batcher_matches_sequential(small_model):
+    """Requests scheduled through slot lanes produce the same greedy
+    tokens as sequential one-at-a-time generation."""
+    cfg, model, params = small_model
+    key = jax.random.PRNGKey(7)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (6,), 0,
+                                  cfg.vocab) for i in range(5)]
+
+    cb = ContinuousBatcher(model, params, batch_size=3, capacity=32)
+    for i, p in enumerate(prompts):
+        cb.submit(Request(req_id=i, prompt=p, max_new=5))
+    done = cb.run()
+    assert len(done) == 5
+    got = {r.req_id: r.out[:5] for r in done}
+
+    for i, p in enumerate(prompts):
+        want = generate(model, params, p[None], n_new=5,
+                        capacity=32)[0].tolist()
+        # first token comes from prefill logits; remaining from decode
+        assert got[i][:5] == want[:5], (i, got[i], want)
+
+
+def test_continuous_batcher_more_requests_than_slots(small_model):
+    cfg, model, params = small_model
+    cb = ContinuousBatcher(model, params, batch_size=2, capacity=24)
+    for i in range(6):
+        cb.submit(Request(req_id=i, prompt=jnp.arange(4, dtype=jnp.int32),
+                          max_new=3))
+    done = cb.run()
+    assert len(done) == 6
+    assert all(len(r.out) >= 3 for r in done)
+
+
+def test_evict_recycles_slot(small_model):
+    cfg, model, params = small_model
+    cb = ContinuousBatcher(model, params, batch_size=1, capacity=24)
+    cb.submit(Request(req_id=0, prompt=jnp.arange(4, dtype=jnp.int32),
+                      max_new=100))
+    cb.submit(Request(req_id=1, prompt=jnp.arange(4, dtype=jnp.int32),
+                      max_new=2))
+    cb.step()                       # admits req 0
+    assert cb.evict(0)
+    done = cb.run()
+    ids = {r.req_id for r in done}
+    assert ids == {0, 1}
+    req1 = next(r for r in done if r.req_id == 1)
+    assert len(req1.out) >= 2
+
+
+def test_request_batcher(small_model):
+    cfg, model, params = small_model
+    rb = RequestBatcher(model, params, batch_size=4, capacity=32)
+    prompts = [jnp.arange(5, dtype=jnp.int32) for _ in range(2)]
+    outs = rb.serve(prompts, n_new=4)
+    assert len(outs) == 2 and all(o.shape == (4,) for o in outs)

@@ -1,0 +1,145 @@
+"""Sharding-rule tests: every arch's parameter tree gets divisibility-
+valid specs; real (laptop-mesh) execution agrees with single-device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.models.model import build_model
+from repro.optim import AdamW, constant
+from repro.sharding import (batch_specs, cache_specs, param_specs,
+                            train_state_specs, zero1_spec)
+from repro.train.state import abstract_train_state
+
+MODEL_SIZE = 16
+
+
+def _flat_axes(spec):
+    out = []
+    for p in spec:
+        if p is None:
+            continue
+        if isinstance(p, tuple):
+            out.extend(p)
+        else:
+            out.append(p)
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divisible(arch):
+    """Every sharded dim divides the mesh axis size — for the FULL config
+    (eval_shape: no allocation)."""
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(params_sds, MODEL_SIZE)
+
+    n_sharded = 0
+    for leaf, spec in zip(jax.tree.leaves(params_sds),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x:
+                                          isinstance(x, P))):
+        assert len(spec) <= len(leaf.shape)
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            assert leaf.shape[dim] % MODEL_SIZE == 0, (leaf.shape, spec)
+            n_sharded += 1
+    # the bulk of parameters must actually be sharded
+    assert n_sharded > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v3-671b",
+                                  "mamba2-780m"])
+def test_zero1_opt_state_sharded(arch):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    opt = AdamW(lr=constant(1e-4))
+    state_sds = abstract_train_state(model, opt)
+    specs = train_state_specs(state_sds, _FakeMesh())
+    # mu for most big matrices must carry a data axis beyond the param
+    # spec.  Exceptions exist: e.g. mamba2's (50280, 1536) embedding has
+    # d_model on the model axis and a vocab not divisible by 16, so its
+    # optimizer state legitimately stays data-unsharded.
+    big = [(l, s) for l, s in zip(
+        jax.tree.leaves(state_sds.opt.mu),
+        jax.tree.leaves(specs.opt.mu, is_leaf=lambda x: isinstance(x, P)))
+        if l.ndim >= 2 and l.size > 1e6]
+    assert big
+    with_data = [s for _, s in big if "data" in _flat_axes(s)]
+    assert len(with_data) >= len(big) * 0.6
+    for leaf, s in big:
+        if "data" not in _flat_axes(s):
+            # only legitimately-indivisible leaves may lack the data axis
+            assert all(d % 16 != 0 or p is not None
+                       for d, p in zip(leaf.shape,
+                                       list(s) + [None] * leaf.ndim)
+                       if d > 1), (leaf.shape, s)
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_zero1_spec_adds_axis():
+    s = zero1_spec(P(None, "model"), (4096, 1024), ("data",), 16)
+    assert s == P("data", "model")
+    # refuses non-divisible
+    s2 = zero1_spec(P(None, "model"), (17, 1024), ("data",), 16)
+    assert s2 == P(None, "model")
+
+
+def test_batch_specs_stacked():
+    sds = {"tokens": jax.ShapeDtypeStruct((8, 32, 128), jnp.int32)}
+    specs = batch_specs(sds, ("data",), 16, stacked=True)
+    assert specs["tokens"] == P(None, "data", None)
+    specs2 = batch_specs(sds, ("pod", "data"), 32, stacked=True)
+    assert specs2["tokens"] == P(None, ("pod", "data"), None)
+
+
+def test_cache_specs_long_context():
+    sds = {"k": jax.ShapeDtypeStruct((48, 1, 524288, 8, 256), jnp.bfloat16),
+           "v": jax.ShapeDtypeStruct((48, 1, 524288, 8, 256), jnp.bfloat16)}
+    specs = cache_specs(sds, ("data",), 16, 16, shard_seq=True)
+    # batch=1 unshardable -> capacity dim over data (flash-decoding style)
+    assert specs["k"][2] == "data"
+
+
+def test_sharded_execution_matches_single_device():
+    """Real multi-device check on the host mesh: a sharded train step
+    produces the same loss as the unsharded one."""
+    n = len(jax.devices())
+    if n < 2:
+        # 1-device CI: the mesh is trivial but the pjit path still runs
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    else:
+        mesh = jax.make_mesh((n // 2 if n % 2 == 0 else 1, 2)
+                             if n >= 2 else (1, 1), ("data", "model"))
+    from repro.data.pipeline import SyntheticLM, stack_microbatches
+    from repro.sharding import to_named
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = get_arch("gemma-2b").reduced()
+    model = build_model(cfg)
+    opt = AdamW(lr=constant(1e-3))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, seq_len=32, global_batch=4)
+    batch = stack_microbatches(data.batch(0), 2)
+    step = make_train_step(model, opt, 2)
+
+    _, ref_metrics = jax.jit(step)(state, batch)
+
+    state_sds = jax.eval_shape(lambda s: s, state)
+    specs = train_state_specs(state_sds, mesh)
+    bspecs = batch_specs(jax.eval_shape(lambda b: b, batch),
+                         ("data",), mesh.shape["data"], stacked=True)
+    jitted = jax.jit(step, in_shardings=(to_named(mesh, specs),
+                                         to_named(mesh, bspecs)))
+    _, got_metrics = jitted(state, batch)
+    np.testing.assert_allclose(float(got_metrics["loss"]),
+                               float(ref_metrics["loss"]), rtol=1e-5)

@@ -1,0 +1,88 @@
+"""Trace-simulator invariants (the Fig. 11 machinery)."""
+import pytest
+
+from benchmarks.common import case5_tasks
+from repro.core.simulator import EFFICIENCY, TraceSimulator, run_policies
+from repro.core.traces import (FailureEvent, trace_a, trace_b, trace_span)
+from repro.core.detection import ErrorKind
+
+
+def test_trace_shapes():
+    a, b = trace_a(), trace_b()
+    assert sum(1 for e in a if e.repair_s is not None) == 10
+    assert len(a) == 43
+    assert sum(1 for e in b if e.repair_s is not None) == 26
+    assert len(b) == 106
+    assert trace_span(a) == 8 * 7 * 86400.0
+    assert trace_span(b) == 7 * 86400.0
+    assert all(x.time <= y.time for x, y in zip(a, a[1:]))
+
+
+def test_no_failures_equals_ideal():
+    tasks, assignment = case5_tasks()
+    sim = TraceSimulator(tasks, list(assignment), "unicron")
+    res = sim.run([], span_s=1000.0)
+    ideal = sim.cluster_waf(0.0) * 1000.0
+    assert res.accumulated_waf == pytest.approx(ideal, rel=1e-9)
+
+
+def test_unicron_dominates_all_policies():
+    tasks, assignment = case5_tasks()
+    res = run_policies(tasks, assignment, trace_b())
+    uni = res["unicron"].accumulated_waf
+    for p, r in res.items():
+        assert uni >= r.accumulated_waf, p
+    # efficiency ordering holds among resilient systems
+    assert res["oobleck"].accumulated_waf > res["bamboo"].accumulated_waf
+    assert res["bamboo"].accumulated_waf > res["varuna"].accumulated_waf
+
+
+def test_sev2_blocks_without_capacity_loss():
+    tasks, assignment = case5_tasks()
+    sim = TraceSimulator(tasks, list(assignment), "unicron")
+    ev = FailureEvent(time=100.0, node=0, kind=ErrorKind.CUDA_ERROR,
+                      repair_s=None)
+    res = sim.run([ev], span_s=10_000.0)
+    # capacity unchanged at the end
+    assert sum(t.workers for t in sim.tasks) == sum(assignment)
+    assert res.downtime_s > 0
+
+
+def test_sev1_shrinks_then_repairs():
+    tasks, assignment = case5_tasks()
+    sim = TraceSimulator(tasks, list(assignment), "unicron")
+    ev = FailureEvent(time=100.0, node=3,
+                      kind=ErrorKind.LOST_CONNECTION, repair_s=5000.0)
+    sim.run([ev], span_s=100_000.0)
+    # node repaired and capacity replanned back to the full pool
+    assert sim.cluster.healthy_workers() == 128
+
+
+def test_megatron_hot_spare_preserves_capacity():
+    tasks, assignment = case5_tasks()
+    sim = TraceSimulator(tasks, list(assignment), "megatron")
+    assert sim.spares == 1
+    ev = FailureEvent(time=100.0, node=3,
+                      kind=ErrorKind.LOST_CONNECTION, repair_s=1e9)
+    sim.run([ev], span_s=10_000.0)
+    # spare consumed, workers unchanged
+    assert sim.spares == 0
+    assert sum(t.workers for t in sim.tasks) == sum(assignment)
+
+
+def test_ablation_ordering_and_consistency():
+    """Each ablated mechanism costs WAF; the triple ablation reproduces
+    the megatron policy exactly (same detection+transition+replanning)."""
+    from repro.core.traces import trace_b
+    tasks, assignment = case5_tasks()
+    trace = trace_b()
+    full = TraceSimulator(tasks, list(assignment), "unicron").run(trace)
+    triple = TraceSimulator(
+        tasks, list(assignment), "unicron", ablate_detection=True,
+        ablate_transition=True, ablate_replan=True).run(trace)
+    meg = TraceSimulator(tasks, list(assignment), "megatron").run(trace)
+    assert triple.accumulated_waf < full.accumulated_waf
+    # triple-ablated unicron == megatron minus the hot spare (<1% apart)
+    assert triple.accumulated_waf == pytest.approx(meg.accumulated_waf,
+                                                   rel=1e-2)
+    assert triple.accumulated_waf <= meg.accumulated_waf
