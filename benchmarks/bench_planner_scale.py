@@ -1,0 +1,121 @@
+"""Planner-engine scale benchmark (§5.2 at production scale).
+
+Measures, over (workers, tasks) in {64..1024} x {4..32}:
+
+  * ``solve``            — vectorized max-plus DP latency, vs the retained
+                           scalar ``solve_reference`` where tractable;
+  * ``PlanTable`` rebuild — incremental build (shared reward rows +
+                           prefix/suffix DPs) vs the scalar
+                           scenario-by-scenario reference where tractable;
+  * dispatch             — ``table.lookup`` latency (the O(1) failure-time
+                           path).
+
+Wherever the reference runs, total rewards must match to 1e-6 on every
+solve and every table scenario; at (n=256, m=16) the incremental rebuild
+must be >= 50x faster than the scalar reference — both are hard-asserted,
+so the harness fails loudly on a regression.
+
+``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grid for CI
+smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_arch
+from repro.core import planner
+from repro.core.costmodel import A800, TaskModel
+from repro.core.planner import PlanInput, PlanTable, solve, solve_reference
+from repro.core.waf import Task
+
+SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+GRID_N = [64, 128, 256, 512, 1024]
+GRID_M = [4, 8, 16, 32]
+# the scalar path is O(m n^2) Python per scenario: only time it where that
+# finishes in seconds, and extrapolate nothing beyond what was measured
+REF_LIMIT = (256, 16)
+SPEEDUP_FLOOR = 50.0      # hard floor at (n, m) == REF_LIMIT
+REL_TOL = 1e-6
+
+
+def _tasks(m: int):
+    return [Task(model=TaskModel.from_arch(get_arch(SIZES[i % len(SIZES)]),
+                                           global_batch=128 if i % 2 else 256),
+                 weight=0.5 + 0.1 * (i % 16)) for i in range(m)]
+
+
+def _rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(1.0, abs(b))
+
+
+def run() -> list:
+    quick = os.environ.get("REPRO_BENCH_QUICK") == "1"
+    grid_n = [64, 256] if quick else GRID_N
+    grid_m = [4, 16] if quick else GRID_M
+    iters = 1 if quick else 3
+    rows = []
+    checked_floor = False
+    for m in grid_m:
+        tasks = _tasks(m)
+        for n in grid_n:
+            if n < 2 * m:
+                continue
+            assignment = [n // m] * m
+            inp = PlanInput(tuple(tasks), tuple(assignment), n,
+                            3600.0, 120.0, (False,) * m)
+            with_ref = n <= REF_LIMIT[0] and m <= REF_LIMIT[1]
+
+            solve_fast_s = timeit(solve, inp, A800, iters=iters)
+            rebuild_fast_s = timeit(
+                lambda: PlanTable(tasks, assignment, A800, 3600.0, 120.0),
+                iters=iters)
+            table = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+            dispatch_s = timeit(table.lookup, "fault:0", warmup=2, iters=5)
+
+            row = {"workers": n, "tasks": m,
+                   "solve_ms": solve_fast_s * 1e3,
+                   "rebuild_ms": rebuild_fast_s * 1e3,
+                   "dispatch_us": dispatch_s * 1e6,
+                   "solve_ref_ms": "", "solve_speedup": "",
+                   "rebuild_ref_ms": "", "rebuild_speedup": "",
+                   "reward_match": ""}
+            if with_ref:
+                fast = solve(inp, A800)
+                t0 = time.perf_counter()
+                ref = solve_reference(inp, A800)
+                solve_ref_s = time.perf_counter() - t0
+                assert _rel_err(fast.total_reward,
+                                ref.total_reward) < REL_TOL, (n, m)
+                t0 = time.perf_counter()
+                ref_table = PlanTable(tasks, assignment, A800, 3600.0,
+                                      120.0, incremental=False,
+                                      solver=solve_reference)
+                rebuild_ref_s = time.perf_counter() - t0
+                mismatches = [k for k in ref_table.table if _rel_err(
+                    table.table[k].total_reward,
+                    ref_table.table[k].total_reward) >= REL_TOL]
+                assert not mismatches, (n, m, mismatches)
+                row.update(
+                    solve_ref_ms=solve_ref_s * 1e3,
+                    solve_speedup=solve_ref_s / solve_fast_s,
+                    rebuild_ref_ms=rebuild_ref_s * 1e3,
+                    rebuild_speedup=rebuild_ref_s / rebuild_fast_s,
+                    reward_match=len(ref_table.table))
+                if (n, m) == REF_LIMIT:
+                    checked_floor = True
+                    speedup = rebuild_ref_s / rebuild_fast_s
+                    assert speedup >= SPEEDUP_FLOOR, (
+                        f"PlanTable rebuild speedup {speedup:.0f}x at "
+                        f"(n={n}, m={m}) below the {SPEEDUP_FLOOR:.0f}x floor")
+                    print(f"[floor check] rebuild speedup at (n={n}, m={m}): "
+                          f"{speedup:.0f}x (floor {SPEEDUP_FLOOR:.0f}x)")
+            rows.append(row)
+    if not quick:
+        assert checked_floor, "grid never hit the (256, 16) floor check"
+    emit(rows, "planner_scale",
+         ["workers", "tasks", "solve_ms", "solve_ref_ms", "solve_speedup",
+          "rebuild_ms", "rebuild_ref_ms", "rebuild_speedup", "dispatch_us",
+          "reward_match"])
+    return rows

@@ -2,23 +2,45 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run detection  # one
+    python benchmarks/run.py --quick                   # CI smoke subset
+
+``--quick`` sets REPRO_BENCH_QUICK=1 (benches trim their grids) and runs
+the smoke subset unless specific benches are named.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
-BENCHES = ["detection", "costmodel", "transition", "throughput",
-           "waf_multitask", "traces", "ablation", "roofline"]
+# allow `python benchmarks/run.py` from a bare checkout: put the repo root
+# (for the `benchmarks` package) and src/ (for `repro`) on the path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+BENCHES = ["detection", "costmodel", "planner_scale", "transition",
+           "throughput", "waf_multitask", "traces", "ablation", "roofline"]
+QUICK_BENCHES = ["detection", "costmodel", "planner_scale", "transition"]
 
 
 def main() -> None:
-    names = sys.argv[1:] or BENCHES
+    args = sys.argv[1:]
+    quick = "--quick" in args
+    unknown = [a for a in args if a.startswith("--") and a != "--quick"]
+    if unknown:
+        sys.exit(f"unknown flags: {unknown} (only --quick is supported)")
+    names = [a for a in args if not a.startswith("--")]
+    if quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    if not names:
+        names = QUICK_BENCHES if quick else BENCHES
     failures = []
     for name in names:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
             mod.run()
             print(f"[bench_{name}: ok, {time.perf_counter() - t0:.1f}s]")
         except Exception as e:                          # noqa: BLE001

@@ -37,6 +37,7 @@ class LoopEvent:
     kind: ErrorKind
     action: Action
     plan: Optional[Tuple[int, ...]] = None
+    plan_latency_s: Optional[float] = None   # dispatch latency (lookup/solve)
 
 
 class ControlLoop:
@@ -91,9 +92,10 @@ class ControlLoop:
                     self.cluster.healthy_workers(),
                     trigger=Trigger.NODE_JOIN)
                 self.cluster.assign(list(plan.assignment))
-                out.append(LoopEvent(now, node.node_id,
-                                     ErrorKind.LOST_CONNECTION,
-                                     Action.RESUME, plan.assignment))
+                out.append(LoopEvent(
+                    now, node.node_id, ErrorKind.LOST_CONNECTION,
+                    Action.RESUME, plan.assignment,
+                    self.coord.plan_stats.last_dispatch_s))
         return out
 
     # ---- decision path -----------------------------------------------------
@@ -102,7 +104,7 @@ class ControlLoop:
         self._case_seq += 1
         case_id = f"{node}:{kind.value}:{self._case_seq}"
         decision = self.coord.on_error(case_id, kind)
-        plan = None
+        plan, plan_s = None, None
         if decision.action is Action.RECONFIGURE:
             owner = self.cluster.placement.get(node)
             self.cluster.fail_node(node, repair_done_at=now + 86400.0)
@@ -111,8 +113,9 @@ class ControlLoop:
                                        trigger=Trigger.ERROR)
             self.cluster.assign(list(p.assignment))
             plan = p.assignment
+            plan_s = self.coord.plan_stats.last_dispatch_s
         self.coord.close_case(case_id)
-        return LoopEvent(now, node, kind, decision.action, plan)
+        return LoopEvent(now, node, kind, decision.action, plan, plan_s)
 
     # ---- escalation entry point (agents report an action failed) ----------
 
@@ -123,7 +126,7 @@ class ControlLoop:
         case_id = f"{node}:{kind.value}:esc{self._case_seq}"
         self.coord.on_error(case_id, kind)
         decision = self.coord.on_action_failed(case_id)
-        plan = None
+        plan, plan_s = None, None
         if decision.action is Action.RECONFIGURE:
             owner = self.cluster.placement.get(node)
             self.cluster.fail_node(node, repair_done_at=now + 86400.0)
@@ -132,7 +135,8 @@ class ControlLoop:
                                        trigger=Trigger.ERROR)
             self.cluster.assign(list(p.assignment))
             plan = p.assignment
+            plan_s = self.coord.plan_stats.last_dispatch_s
         self.coord.close_case(case_id)
-        ev = LoopEvent(now, node, kind, decision.action, plan)
+        ev = LoopEvent(now, node, kind, decision.action, plan, plan_s)
         self.events.append(ev)
         return ev

@@ -7,6 +7,7 @@ time; every decision here is the real algorithm.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -30,6 +31,20 @@ class TaskEntry:
     state_bytes: float = 0.0
 
 
+@dataclass
+class PlanStats:
+    """Planner-engine accounting: how long plan generation takes and how
+    often failure-time dispatch was an O(1) table hit (the §5.2 claim the
+    vectorized engine has to uphold at scale)."""
+    table_rebuilds: int = 0
+    table_rebuild_s: float = 0.0       # cumulative
+    last_rebuild_s: float = 0.0
+    lookup_hits: int = 0
+    fresh_solves: int = 0
+    fresh_solve_s: float = 0.0         # cumulative
+    last_dispatch_s: float = 0.0       # latency of the last plan_for()
+
+
 class UnicronCoordinator:
     def __init__(self, tasks: List[Task], assignment: List[int],
                  hw: Hardware, kv: Optional[KVStore] = None,
@@ -45,6 +60,7 @@ class UnicronCoordinator:
         self.d_transition = d_transition_s
         self.open_cases: Dict[str, FailureCase] = {}
         self._table: Optional[PlanTable] = None
+        self.plan_stats = PlanStats()
         self.refresh_plan_table()
 
     # ---- plan generation -------------------------------------------------
@@ -60,21 +76,36 @@ class UnicronCoordinator:
                                for i in range(len(tasks))))
 
     def refresh_plan_table(self) -> None:
-        """Precompute one-step lookahead plans (§5.2) for O(1) dispatch."""
+        """Precompute one-step lookahead plans (§5.2) for O(1) dispatch,
+        via the incremental vectorized build (shared reward rows +
+        prefix/suffix DPs)."""
         assignment = [e.n_workers for e in self.entries]
         d_run = waf_mod.expected_run_duration(sum(assignment), self.mtbf)
+        t0 = time.perf_counter()
         self._table = PlanTable([e.task for e in self.entries], assignment,
                                 self.hw, d_run, self.d_transition)
+        dt = time.perf_counter() - t0
+        self.plan_stats.table_rebuilds += 1
+        self.plan_stats.table_rebuild_s += dt
+        self.plan_stats.last_rebuild_s = dt
 
     def plan_for(self, n_workers: int, faulted_task: Optional[int],
                  lookup_key: Optional[str] = None) -> Tuple[Plan, bool]:
         """Returns (plan, was_lookup_hit)."""
+        t0 = time.perf_counter()
         if lookup_key and self._table:
             hit = self._table.lookup(lookup_key)
             if hit is not None:
+                self.plan_stats.lookup_hits += 1
+                self.plan_stats.last_dispatch_s = time.perf_counter() - t0
                 return hit, True
-        return planner.solve(self._plan_input(n_workers, faulted_task),
-                             self.hw), False
+        plan = planner.solve(self._plan_input(n_workers, faulted_task),
+                             self.hw)
+        dt = time.perf_counter() - t0
+        self.plan_stats.fresh_solves += 1
+        self.plan_stats.fresh_solve_s += dt
+        self.plan_stats.last_dispatch_s = dt
+        return plan, False
 
     # ---- error handling ----------------------------------------------------
 
@@ -104,10 +135,15 @@ class UnicronCoordinator:
             key = f"fault:{faulted_task}"
         elif trigger is Trigger.NODE_JOIN:
             key = "join:1"
+        t0 = time.perf_counter()
         plan, hit = self.plan_for(n_workers_now, faulted_task, key)
         if hit and sum(plan.assignment) > n_workers_now:
-            # precomputed scenario does not match reality: fresh solve
+            # precomputed scenario does not match reality: fresh solve.
+            # The discarded hit was not a usable dispatch — uncount it and
+            # charge the whole lookup-plus-solve to this dispatch.
+            self.plan_stats.lookup_hits -= 1
             plan, _ = self.plan_for(n_workers_now, faulted_task, None)
+            self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         for e, x in zip(self.entries, plan.assignment):
             e.n_workers = x
         self.refresh_plan_table()

@@ -12,13 +12,25 @@ worker counts force worse configurations or idle workers).
 
 Two hardware presets: A800 (the paper's testbed) and TPU v5e (our target);
 all experiments record which preset they used.
+
+Two evaluation paths share the same formulas:
+
+* the **scalar reference** (``_best_plan`` / ``achieved_flops``), one worker
+  count at a time, kept for property tests and as the ground truth;
+* the **vectorized engine** (``throughput_curve``), which evaluates the whole
+  feasible (dp, tp, pp, micro_b) grid for *all* worker counts ``1..n`` in one
+  NumPy sweep and is memoized per ``(task, hw)`` — this is what the planner's
+  reward-row construction and ``min_feasible_workers`` run on, so a plan-table
+  rebuild touches the analytic model once per task instead of once per cell.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.configs.base import ArchConfig
 
@@ -156,9 +168,9 @@ def best_plan(task: TaskModel, x: int, hw: Hardware = A800):
     return _best_plan(task, x, hw)
 
 
-def min_feasible_workers(task: TaskModel, hw: Hardware = A800,
-                         upper: int = 4096) -> int:
-    """Smallest x with a feasible plan (T_necessary floor)."""
+def min_feasible_workers_reference(task: TaskModel, hw: Hardware = A800,
+                                   upper: int = 4096) -> int:
+    """Scalar reference: linear scan from x=1 (kept for property tests)."""
     x = 1
     while x <= upper:
         if _best_plan(task, x, hw) is not None:
@@ -171,3 +183,157 @@ def flops_ratio(task: TaskModel, x: int, hw: Hardware = A800) -> float:
     """Achieved fraction of the x workers' theoretical peak (Fig. 4)."""
     t = achieved_flops(task, x, hw)
     return t / (x * hw.peak_flops) if x else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine: T(t, ·) for all worker counts in one sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ThroughputCurve:
+    """T(t, x) for x = 0..n plus the argmax plan at every x.
+
+    ``flops[x]`` is the achieved aggregate FLOP/s of the best feasible
+    (dp, tp, pp, micro_b) configuration on x workers (0.0 when none fits);
+    ``cfg[x]`` indexes into ``configs`` (-1 when infeasible).  Arrays are
+    views into the memoized per-(task, hw) sweep, so slicing is free.
+    """
+    task: TaskModel
+    hw: Hardware
+    n: int
+    flops: np.ndarray                  # (n+1,) float64
+    cfg: np.ndarray                    # (n+1,) int64, -1 = infeasible
+    dp: np.ndarray                     # (n+1,) int64
+    t_iter: np.ndarray                 # (n+1,) float64
+    mem: np.ndarray                    # (n+1,) float64
+    configs: Tuple[Tuple[int, int, int], ...]   # (tp, pp, micro_b)
+
+    def plan(self, x: int) -> Optional[PlanPoint]:
+        """PlanPoint at worker count x (None if infeasible)."""
+        if x <= 0 or x > self.n or self.cfg[x] < 0:
+            return None
+        tp, pp, _ = self.configs[int(self.cfg[x])]
+        return PlanPoint(int(self.dp[x]), tp, pp, float(self.t_iter[x]),
+                         float(self.flops[x]), float(self.mem[x]))
+
+    def min_feasible(self) -> Optional[int]:
+        """Smallest x with a feasible plan, or None if none up to n."""
+        nz = np.nonzero(self.cfg[1:] >= 0)[0]
+        return int(nz[0]) + 1 if nz.size else None
+
+
+def _feasible_configs(task: TaskModel, n: int,
+                      hw: Hardware) -> List[Tuple[int, int, int]]:
+    """All (tp, pp, micro_b) memory-feasible on <= n workers, enumerated in
+    the same order as the scalar reference so argmax tie-breaks agree."""
+    out: List[Tuple[int, int, int]] = []
+    tps = [t for t in (1, 2, 4, 8, 16) if t <= min(n, hw.intra_size)]
+    for tp in tps:
+        pp = 1
+        while tp * pp <= n and pp <= task.n_layers:
+            if task.n_layers % pp == 0:
+                for micro_b in (1, 2, 4):
+                    if _mem_per_worker(task, tp, pp, micro_b,
+                                       hw) <= hw.hbm_bytes:
+                        out.append((tp, pp, micro_b))
+            pp *= 2
+    return out
+
+
+def _sweep(task: TaskModel, n: int, hw: Hardware) -> ThroughputCurve:
+    """Evaluate every feasible config on every worker count 1..n at once.
+
+    Mirrors ``_iter_time``'s arithmetic (same operation order) so the curve
+    is float-identical to the scalar reference at every x.
+    """
+    B, S, N, L, d = (task.global_batch, task.seq_len, task.n_params,
+                     task.n_layers, task.d_model)
+    configs = _feasible_configs(task, n, hw)
+    X = np.arange(n + 1, dtype=np.int64)
+    if not configs:
+        z = np.zeros(n + 1)
+        return ThroughputCurve(task, hw, n, z,
+                               np.full(n + 1, -1, dtype=np.int64),
+                               np.zeros(n + 1, dtype=np.int64), z.copy(),
+                               z.copy(), ())
+    agg = np.zeros((len(configs), n + 1))          # achieved FLOP/s, 0 = infeasible
+    dps = np.zeros((len(configs), n + 1), dtype=np.int64)
+    its = np.zeros((len(configs), n + 1))
+    tokens = B * S
+    flops = 6.0 * N * tokens
+    for ci, (tp, pp, micro_b) in enumerate(configs):
+        dp = X // (tp * pp)
+        ok = (dp >= 1) & (dp <= B) & (micro_b * dp <= B)
+        dp_s = np.where(ok, dp, 1)                 # safe divisor
+        m = np.maximum(1, np.ceil(B / (dp_s * micro_b)))
+        t_comp = flops / (dp_s * tp * pp * hw.peak_flops * hw.compute_eff)
+        t_comp = t_comp * ((m + pp - 1) / m)
+        if tp > 1:
+            bw = hw.intra_bw if tp <= hw.intra_size else hw.inter_bw
+            tp_bytes = 4 * L / pp * (2.0 * S * micro_b * d) * m
+            t_tp = tp_bytes * 2 * (tp - 1) / tp / bw
+        else:
+            t_tp = np.zeros(n + 1)
+        g_bytes = 2.0 * N / (tp * pp)
+        bw_dp = np.where(dp_s * tp * pp <= hw.intra_size,
+                         hw.intra_bw, hw.inter_bw)
+        t_dp = np.where(dp_s > 1,
+                        0.5 * g_bytes * 2 * (dp_s - 1) / dp_s / bw_dp, 0.0)
+        imbalance = np.ceil(B / dp_s) / (B / dp_s)
+        t = (t_comp + t_tp + t_dp) * imbalance
+        used = (6.0 * task.n_params * task.global_batch * task.seq_len) / t
+        agg[ci] = np.where(ok, used, 0.0)
+        dps[ci] = np.where(ok, dp, 0)
+        its[ci] = np.where(ok, t, 0.0)
+    best = np.argmax(agg, axis=0)                  # first max, like reference
+    rows = np.arange(n + 1)
+    best_agg = agg[best, rows]
+    cfg = np.where(best_agg > 0.0, best, -1).astype(np.int64)
+    mems = np.array([_mem_per_worker(task, tp, pp, mb, hw)
+                     for tp, pp, mb in configs])
+    mem = np.where(cfg >= 0, mems[np.maximum(cfg, 0)], 0.0)
+    return ThroughputCurve(task, hw, n, best_agg, cfg, dps[best, rows],
+                           its[best, rows], mem, tuple(configs))
+
+
+_CURVE_CACHE: Dict[Tuple[TaskModel, Hardware], ThroughputCurve] = {}
+_CURVE_CACHE_MAX = 1024                # curves are O(n) arrays; bound the set
+
+
+def throughput_curve(task: TaskModel, n: int,
+                     hw: Hardware = A800) -> ThroughputCurve:
+    """T(t, ·) vector for worker counts 0..n plus argmax plans, memoized per
+    (task, hw); a larger-n request grows the cached sweep, a smaller one
+    returns views into it."""
+    cached = _CURVE_CACHE.pop((task, hw), None)
+    if cached is None or cached.n < n:
+        cached = _sweep(task, max(n, 1), hw)
+    while len(_CURVE_CACHE) >= _CURVE_CACHE_MAX:      # LRU: dicts keep
+        _CURVE_CACHE.pop(next(iter(_CURVE_CACHE)))    # insertion order
+    _CURVE_CACHE[(task, hw)] = cached
+    if cached.n == n:
+        return cached
+    s = slice(0, n + 1)
+    return ThroughputCurve(task, hw, n, cached.flops[s], cached.cfg[s],
+                           cached.dp[s], cached.t_iter[s], cached.mem[s],
+                           cached.configs)
+
+
+def min_feasible_workers(task: TaskModel, hw: Hardware = A800,
+                         upper: int = 4096) -> int:
+    """Smallest x with a feasible plan (T_necessary floor).
+
+    Exponential search over the vectorized curve: double the sweep range
+    until a feasible count appears, then read the first nonzero entry
+    directly off the curve (the curve gives the whole feasibility vector,
+    subsuming the binary-search refinement step)."""
+    n = 64
+    while True:
+        n = min(n, upper)
+        found = throughput_curve(task, n, hw).min_feasible()
+        if found is not None:
+            return found
+        if n >= upper:
+            return upper
+        n *= 2

@@ -4,9 +4,21 @@ Knapsack-style dynamic program over (tasks x workers):
 
     S(i, j) = max_k { S(i-1, j-k) + G(t_i, k) }           (Eq. 5)
 
-O(m n^2) time; ``PlanTable`` additionally precomputes the one-step
-lookahead lookup table the paper uses for O(1) dispatch at failure time —
-keyed by (faulted task or joining worker count) scenarios.
+Two solver paths share the recurrence:
+
+* ``solve`` — the vectorized engine: reward rows come out of the memoized
+  cost-model sweep as whole vectors (``waf.reward_curve``), and the DP inner
+  loop is a max-plus convolution evaluated as one NumPy windowed matrix per
+  task (O(n^2) cells but a single vector op), with argmax traceback.
+* ``solve_reference`` — the original pure-Python scalar DP, kept as the
+  ground truth for property tests and the speedup baseline.
+
+``PlanTable`` precomputes the one-step lookahead lookup table the paper uses
+for O(1) dispatch at failure time.  The incremental build shares the m base
+reward rows across ALL fault/join/finish scenarios: prefix and suffix DPs
+over the base rows are computed once, and each scenario is then one or two
+max-plus combines instead of a full m-row solve — O(m) convolutions for the
+whole table instead of O(m^2).
 
 ``brute_force`` is an exponential reference used by the property tests.
 """
@@ -16,9 +28,13 @@ import itertools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import waf as waf_mod
-from repro.core.costmodel import Hardware
+from repro.core.costmodel import Hardware, TaskModel
 from repro.core.waf import Task
+
+NEG = float("-inf")
 
 
 @dataclass(frozen=True)
@@ -38,8 +54,17 @@ class Plan:
     waf: float                         # cluster WAF under the new assignment
 
 
+def _vector_capable(tasks: Sequence) -> bool:
+    """Reward rows can be built from the cost-model sweep (real ``Task``s
+    with analytic ``TaskModel``s).  Duck-typed tasks — e.g. the tabulated
+    tasks the property tests use with a monkeypatched ``waf`` — fall back
+    to the scalar row builder so they keep their custom semantics."""
+    return all(isinstance(t, Task) and isinstance(t.model, TaskModel)
+               for t in tasks)
+
+
 def _reward_row(inp: PlanInput, i: int, hw: Hardware) -> List[float]:
-    """G(t_i, k) for k = 0..n_workers."""
+    """G(t_i, k) for k = 0..n_workers (scalar reference path)."""
     t = inp.tasks[i]
     return [waf_mod.reward(t, inp.assignment[i], k,
                            d_running=inp.d_running,
@@ -48,11 +73,61 @@ def _reward_row(inp: PlanInput, i: int, hw: Hardware) -> List[float]:
             for k in range(inp.n_workers + 1)]
 
 
+def _reward_matrix(inp: PlanInput, hw: Hardware) -> np.ndarray:
+    """All m reward rows as an (m, n+1) matrix."""
+    if _vector_capable(inp.tasks):
+        return np.stack([
+            waf_mod.reward_curve(t, inp.assignment[i], inp.n_workers,
+                                 d_running=inp.d_running,
+                                 d_transition=inp.d_transition,
+                                 worker_faulted=inp.faulted[i], hw=hw)
+            for i, t in enumerate(inp.tasks)])
+    return np.array([_reward_row(inp, i, hw)
+                     for i in range(len(inp.tasks))], dtype=float)
+
+
+def _maxplus(prev: np.ndarray, g: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """One max-plus convolution step: out[j] = max_{0<=k<=j} prev[j-k] + g[k],
+    plus the argmax k per j (first/lowest k on ties, matching the scalar
+    DP's strict-improvement rule)."""
+    n = prev.shape[0] - 1
+    pad = np.concatenate([np.full(n, NEG), prev])
+    win = np.lib.stride_tricks.sliding_window_view(pad, n + 1)
+    vals = win[:, ::-1] + g[None, :]   # vals[j, k] = prev[j-k] + g[k]
+    ch = vals.argmax(axis=1)           # one O(n^2) scan serves both outputs
+    return vals[np.arange(n + 1), ch], ch
+
+
+def _cluster_waf(tasks: Sequence[Task], assign: Sequence[int],
+                 hw: Hardware) -> float:
+    return sum(waf_mod.waf(t, x, hw) for t, x in zip(tasks, assign))
+
+
 def solve(inp: PlanInput, hw: Hardware) -> Plan:
-    """Dynamic program (Eq. 5) with traceback."""
+    """Vectorized dynamic program (Eq. 5) with traceback."""
+    m, n = len(inp.tasks), inp.n_workers
+    if m == 0:
+        return Plan((), 0.0, 0.0)
+    rows = _reward_matrix(inp, hw)
+    S = np.zeros(n + 1)
+    choice = np.zeros((m, n + 1), dtype=np.int64)
+    for i in range(m):
+        S, choice[i] = _maxplus(S, rows[i])
+    assign = [0] * m
+    j = int(np.argmax(S))
+    total = float(S[j])
+    for i in range(m - 1, -1, -1):
+        k = int(choice[i, j])
+        assign[i] = k
+        j -= k
+    return Plan(tuple(assign), total, _cluster_waf(inp.tasks, assign, hw))
+
+
+def solve_reference(inp: PlanInput, hw: Hardware) -> Plan:
+    """Scalar reference DP (the original implementation): property-test
+    ground truth and the speedup baseline for the benchmarks."""
     m, n = len(inp.tasks), inp.n_workers
     rows = [_reward_row(inp, i, hw) for i in range(m)]
-    NEG = float("-inf")
     # S[i][j]: best reward of first i tasks using j workers
     S = [[0.0] + [0.0] * n]
     choice: List[List[int]] = []
@@ -77,9 +152,7 @@ def solve(inp: PlanInput, hw: Hardware) -> Plan:
         k = choice[i - 1][j]
         assign[i - 1] = k
         j -= k
-    cluster_waf = sum(waf_mod.waf(t, x, hw)
-                      for t, x in zip(inp.tasks, assign))
-    return Plan(tuple(assign), total, cluster_waf)
+    return Plan(tuple(assign), total, _cluster_waf(inp.tasks, assign, hw))
 
 
 def brute_force(inp: PlanInput, hw: Hardware) -> Plan:
@@ -94,28 +167,47 @@ def brute_force(inp: PlanInput, hw: Hardware) -> Plan:
         if best is None or v > best[0]:
             best = (v, assign)
     v, assign = best
-    cluster_waf = sum(waf_mod.waf(t, x, hw)
-                      for t, x in zip(inp.tasks, assign))
-    return Plan(tuple(assign), v, cluster_waf)
+    return Plan(tuple(assign), v, _cluster_waf(inp.tasks, assign, hw))
 
 
 class PlanTable:
     """Precomputed lookup table (§5.2 'Complexity'): one-step lookahead
     plans for every single-event scenario from the current configuration —
     any task losing one worker, a worker joining, a task finishing —
-    giving O(1) dispatch when the event actually happens."""
+    giving O(1) dispatch when the event actually happens.
+
+    Incremental build: base reward rows G(t_i, ·) at the largest scenario
+    budget are computed once from the memoized cost-model curves, prefix
+    DPs P[i] (tasks 0..i-1) and suffix DPs T[i] (tasks i..m-1) are each one
+    max-plus pass, and every scenario is then assembled from them:
+
+      fault:i   combine(P[i], fault-row_i, T[i+1])   (2 convolutions)
+      join:1    traceback of P[m]                     (0 convolutions)
+      finish:i  combine(P[i], T[i+1])                 (1 convolution)
+
+    ``incremental=False`` retains the original scenario-by-scenario full
+    solves (the reference path the tests and benchmarks compare against).
+    """
 
     def __init__(self, tasks: Sequence[Task], assignment: Sequence[int],
                  hw: Hardware, d_running: float, d_transition: float,
-                 workers_per_fault: int = 8):
+                 workers_per_fault: int = 8, incremental: bool = True,
+                 solver=None):
+        """``incremental=False`` falls back to one full solve per scenario;
+        ``solver`` then picks the per-scenario solver (default ``solve``;
+        pass ``solve_reference`` for the all-scalar baseline)."""
         self.tasks = tuple(tasks)
         self.assignment = tuple(assignment)
         self.hw = hw
         self.d_running = d_running
         self.d_transition = d_transition
         self.workers_per_fault = workers_per_fault  # a node drain = 8 GPUs
+        self._solver = solver or solve
         self.table: Dict[str, Plan] = {}
-        self._precompute()
+        if incremental and solver is None and _vector_capable(self.tasks):
+            self._precompute_incremental()
+        else:
+            self._precompute_reference()
 
     def _scenario_input(self, n_workers: int,
                         faulted_task: Optional[int]) -> PlanInput:
@@ -123,14 +215,16 @@ class PlanTable:
         return PlanInput(self.tasks, self.assignment, n_workers,
                          self.d_running, self.d_transition, faulted)
 
-    def _precompute(self) -> None:
+    # ---- reference build: one full solve per scenario ---------------------
+
+    def _precompute_reference(self) -> None:
         n_now = sum(self.assignment)
         w = self.workers_per_fault
         for ti in range(len(self.tasks)):
             key = f"fault:{ti}"
-            self.table[key] = solve(
+            self.table[key] = self._solver(
                 self._scenario_input(max(n_now - w, 0), ti), self.hw)
-        self.table["join:1"] = solve(
+        self.table["join:1"] = self._solver(
             self._scenario_input(n_now + w, None), self.hw)
         for ti in range(len(self.tasks)):
             # task ti finished: its workers return to the pool
@@ -139,7 +233,89 @@ class PlanTable:
             inp = PlanInput(rem_tasks, rem_assign, n_now,
                             self.d_running, self.d_transition,
                             (False,) * len(rem_tasks))
-            self.table[f"finish:{ti}"] = solve(inp, self.hw)
+            self.table[f"finish:{ti}"] = self._solver(inp, self.hw)
+
+    # ---- incremental build: shared rows + prefix/suffix DPs ---------------
+
+    def _precompute_incremental(self) -> None:
+        m = len(self.tasks)
+        if m == 0:                      # empty task set: only join exists
+            self._precompute_reference()
+            return
+        n_now = sum(self.assignment)
+        w = self.workers_per_fault
+        n_max = n_now + w                       # join is the largest budget
+        n_fault = max(n_now - w, 0)
+        base = np.stack([
+            waf_mod.reward_curve(t, self.assignment[i], n_max,
+                                 d_running=self.d_running,
+                                 d_transition=self.d_transition,
+                                 worker_faulted=False, hw=self.hw)
+            for i, t in enumerate(self.tasks)])
+        # prefix DPs: P[i] covers tasks 0..i-1; pch[i] is task i's choice
+        P = [np.zeros(n_max + 1)]
+        pch = np.zeros((m, n_max + 1), dtype=np.int64)
+        for i in range(m):
+            nxt, pch[i] = _maxplus(P[i], base[i])
+            P.append(nxt)
+        # suffix DPs: T[i] covers tasks i..m-1; sch[i] is task i's choice
+        T = [np.zeros(n_max + 1) for _ in range(m + 1)]
+        sch = np.zeros((m, n_max + 1), dtype=np.int64)
+        for i in range(m - 1, -1, -1):
+            T[i], sch[i] = _maxplus(T[i + 1], base[i])
+
+        def walk_prefix(last: int, budget: int, assign: List[int]) -> None:
+            for t in range(last, -1, -1):
+                k = int(pch[t, budget])
+                assign[t] = k
+                budget -= k
+
+        def walk_suffix(first: int, budget: int, assign: List[int],
+                        offset: int = 0) -> None:
+            for t in range(first, m):
+                k = int(sch[t, budget])
+                assign[t - offset] = k
+                budget -= k
+
+        def finish_plan(skip: int) -> Plan:
+            combined, cch = _maxplus(P[skip], T[skip + 1])
+            j = int(np.argmax(combined[:n_now + 1]))
+            total = float(combined[j])
+            assign = [0] * (m - 1)
+            b = int(cch[j])
+            walk_prefix(skip - 1, j - b, assign)
+            walk_suffix(skip + 1, b, assign, offset=1)
+            rem = self.tasks[:skip] + self.tasks[skip + 1:]
+            return Plan(tuple(assign), total,
+                        _cluster_waf(rem, assign, self.hw))
+
+        for ti in range(m):
+            frow = waf_mod.reward_curve(
+                self.tasks[ti], self.assignment[ti], n_max,
+                d_running=self.d_running, d_transition=self.d_transition,
+                worker_faulted=True, hw=self.hw)
+            mid, mch = _maxplus(P[ti], frow)
+            combined, cch = _maxplus(mid, T[ti + 1])
+            j = int(np.argmax(combined[:n_fault + 1]))
+            total = float(combined[j])
+            assign = [0] * m
+            b = int(cch[j])                     # suffix budget
+            k = int(mch[j - b])                 # faulted task's workers
+            assign[ti] = k
+            walk_prefix(ti - 1, j - b - k, assign)
+            walk_suffix(ti + 1, b, assign)
+            self.table[f"fault:{ti}"] = Plan(
+                tuple(assign), total, _cluster_waf(self.tasks, assign,
+                                                   self.hw))
+
+        j = int(np.argmax(P[m]))                # join: full budget n_max
+        assign = [0] * m
+        walk_prefix(m - 1, j, assign)
+        self.table["join:1"] = Plan(tuple(assign), float(P[m][j]),
+                                    _cluster_waf(self.tasks, assign,
+                                                 self.hw))
+        for ti in range(m):
+            self.table[f"finish:{ti}"] = finish_plan(ti)
 
     def lookup(self, key: str) -> Optional[Plan]:
         return self.table.get(key)

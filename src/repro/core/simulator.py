@@ -85,6 +85,10 @@ class TraceSimulator:
         self.ablate_replan = ablate_replan
         self.hw = hw
         self.eff = EFFICIENCY[policy]
+        # WAF timeline sampling reads F(t, ·) straight off the memoized
+        # cost-model curves; one vector per distinct task for the whole run
+        self._n_total = n_nodes * gpus_per_node
+        self._waf_curves: Dict[Task, object] = {}
         self.cluster = Cluster(n_nodes, gpus_per_node)
         self.gpn = gpus_per_node
         self.tasks = [SimTask(task=t, workers=x)
@@ -99,12 +103,23 @@ class TraceSimulator:
 
     # ---- instantaneous cluster WAF ----------------------------------------
 
+    def _waf(self, task: Task, x: int) -> float:
+        """F(t, x) via the per-task curve (vector lookup; scalar fallback
+        for worker counts beyond the cluster size)."""
+        if 0 <= x <= self._n_total:
+            F = self._waf_curves.get(task)
+            if F is None:
+                F = waf_mod.waf_curve(task, self._n_total, self.hw)
+                self._waf_curves[task] = F
+            return float(F[x])
+        return waf_mod.waf(task, x, self.hw)
+
     def cluster_waf(self, now: float) -> float:
         total = 0.0
         for st in self.tasks:
             if now < st.blocked_until or st.workers <= 0:
                 continue
-            total += waf_mod.waf(st.task, st.workers, self.hw) * self.eff
+            total += self._waf(st.task, st.workers) * self.eff
         return total
 
     # ---- policy behaviours -------------------------------------------------

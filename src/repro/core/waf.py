@@ -1,9 +1,16 @@
 """WAF — weighted achieved aggregate FLOP/s (§5.1, Eq. 2) and the
-reconfiguration reward G (Eq. 3/4)."""
+reconfiguration reward G (Eq. 3/4).
+
+Scalar entry points (``waf``, ``reward``) are the reference semantics; the
+vector entry points (``waf_curve``, ``reward_curve``) produce whole
+F(t, ·) / G(t, ·) rows at once from the memoized cost-model sweep, which is
+what the vectorized planner consumes."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Optional
+
+import numpy as np
 
 from repro.core import costmodel
 from repro.core.costmodel import Hardware, TaskModel
@@ -38,6 +45,31 @@ def reward(task: Task, x_old: int, x_new: int, *, d_running: float,
     g = waf(task, x_new, hw) * d_running
     if x_old != x_new or worker_faulted:
         g -= waf(task, x_old, hw) * d_transition
+    return g
+
+
+def waf_curve(task: Task, n: int, hw: Hardware) -> np.ndarray:
+    """F(t, ·) for x = 0..n as one vector (Eq. 2), from the memoized
+    cost-model sweep: weight * T(t, x), zeroed below the requirement floor."""
+    curve = costmodel.throughput_curve(task.model, n, hw)
+    F = task.weight * curve.flops[:n + 1]          # fresh array (not a view)
+    floor = task.necessary(hw)
+    F[:min(max(floor, 1), n + 1)] = 0.0
+    return F
+
+
+def reward_curve(task: Task, x_old: int, n: int, *, d_running: float,
+                 d_transition: float, worker_faulted: bool,
+                 hw: Hardware) -> np.ndarray:
+    """G(t, ·) for x' = 0..n as one vector (Eq. 3/4).
+
+    Same values as ``reward`` at every x': the no-transition entry
+    (x' == x_old, not faulted) is recomputed directly rather than by
+    adding the penalty back, to stay float-identical to the scalar path."""
+    F = waf_curve(task, n, hw)
+    g = F * d_running - waf(task, x_old, hw) * d_transition
+    if not worker_faulted and 0 <= x_old <= n:
+        g[x_old] = F[x_old] * d_running
     return g
 
 

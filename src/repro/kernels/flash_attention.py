@@ -16,12 +16,15 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_config import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -91,9 +94,11 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
                         softcap: float = 0.0, q_offset: int = 0,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, Sq, H, D); k, v: (B, Sk, KV, Dk/Dv) with H % KV == 0.
-    Returns (B, Sq, H, Dv)."""
+    Returns (B, Sq, H, Dv).  ``interpret=None`` defers to
+    REPRO_PALLAS_INTERPRET / the backend default (compile only on TPU)."""
+    interpret = resolve_interpret(interpret)
     B, Sq, H, D = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     Dv = v.shape[3]

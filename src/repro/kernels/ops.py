@@ -6,9 +6,9 @@ for forward-optimized kernels: the backward pass recomputes from the
 oracle, which is bitwise-compatible with the kernel output to float
 tolerance (asserted by tests/test_kernels.py).
 
-``interpret`` defaults to True off-TPU so the kernels execute (and are
-validated) on CPU; on a TPU backend the same ``pl.pallas_call`` lowers to
-Mosaic.
+``interpret`` resolution lives in ``pallas_config.resolve_interpret``: the
+kernels compile on TPU (Mosaic) and interpret everywhere else, with
+REPRO_PALLAS_INTERPRET / per-call kwargs as the overrides.
 """
 from __future__ import annotations
 
@@ -24,10 +24,6 @@ from repro.kernels.rmsnorm import rmsnorm_fwd
 from repro.kernels.ssd_scan import ssd_scan_fwd
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
@@ -37,8 +33,7 @@ def _interpret_default() -> bool:
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     softcap: float = 0.0, q_offset: int = 0) -> jnp.ndarray:
     return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               softcap=softcap, q_offset=q_offset,
-                               interpret=_interpret_default())
+                               softcap=softcap, q_offset=q_offset)
 
 
 def _fa_fwd(q, k, v, causal, window, softcap, q_offset):
@@ -65,8 +60,7 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128) -> Tuple:
-    return ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk,
-                        interpret=_interpret_default())
+    return ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk)
 
 
 def _ssd_fwd(x, dt, A, Bm, Cm, chunk):
@@ -92,7 +86,7 @@ ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
 
 @jax.custom_vjp
 def rmsnorm(x, scale) -> jnp.ndarray:
-    return rmsnorm_fwd(x, scale, interpret=_interpret_default())
+    return rmsnorm_fwd(x, scale)
 
 
 def _rn_fwd(x, scale):

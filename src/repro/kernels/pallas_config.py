@@ -1,0 +1,36 @@
+"""Shared Pallas execution-mode policy for the kernel modules.
+
+``interpret`` resolution order:
+
+  1. explicit kwarg (``True``/``False``) passed by the caller,
+  2. ``REPRO_PALLAS_INTERPRET`` env var (``1/true/yes`` or ``0/false/no``),
+  3. backend default: compile only on TPU (Mosaic).  These kernels use
+     TPU-flavored constructs (``pltpu.VMEM`` scratch shapes, sequential
+     last grid dim) that the GPU/Triton lowering does not accept, so CPU
+     *and* GPU fall back to interpret mode.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_TRUE = {"1", "true", "yes", "on"}
+_FALSE = {"0", "false", "no", "off"}
+
+
+def resolve_interpret(override: Optional[bool] = None) -> bool:
+    if override is not None:
+        return override
+    env = os.environ.get(_ENV, "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"{_ENV}={os.environ[_ENV]!r} is not recognized; use one of "
+            f"{sorted(_TRUE)} or {sorted(_FALSE)}")
+    return jax.default_backend() != "tpu"

@@ -8,10 +8,13 @@ rsqrt, mul) into one read + one write.  Rows are tiled at 256 to keep the
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_config import resolve_interpret
 
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
@@ -22,8 +25,11 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
 
 
 def rmsnorm_fwd(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
-                interpret: bool = True):
-    """x: (..., d); scale: (d,).  Returns rmsnorm(x) * scale in x.dtype."""
+                interpret: Optional[bool] = None):
+    """x: (..., d); scale: (d,).  Returns rmsnorm(x) * scale in x.dtype.
+    ``interpret=None`` defers to REPRO_PALLAS_INTERPRET / the backend
+    default (compile only on TPU)."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = x.shape[-1]
     rows = 1

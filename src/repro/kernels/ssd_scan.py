@@ -17,12 +17,15 @@ dt (L,), B/C (L, N) — all VMEM-resident, with L=chunk default 128 so the
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_config import resolve_interpret
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref,
@@ -81,10 +84,13 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref,
 
 
 def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk: int = 128,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
     """x: (B,S,H,P) f32; dt: (B,S,H) f32; A: (H,) f32 (<=0);
     Bm, Cm: (B,S,G,N) with H % G == 0.
-    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  ``interpret=None``
+    defers to REPRO_PALLAS_INTERPRET / the backend default (compile only
+    on TPU)."""
+    interpret = resolve_interpret(interpret)
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     assert H % G == 0, (H, G)

@@ -1,9 +1,17 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an optional test dependency (the ``test`` extra in
+pyproject.toml); the module skips cleanly where it isn't installed."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.planner import Plan, PlanInput, brute_force, solve
+from repro.core.planner import (Plan, PlanInput, brute_force, solve,
+                                solve_reference)
 from repro.core.resumption import MicroBatchIteration
 from repro.core.costmodel import Hardware
 from repro.core.waf import Task, waf
@@ -48,10 +56,11 @@ def _reward_tables(tasks, assignment, n, d_run, d_tr, faulted):
         inp = PlanInput(tuple(tasks), tuple(assignment), n, d_run, d_tr,
                         tuple(faulted))
         got = solve(inp, HW)
+        scalar = solve_reference(inp, HW)
         want = brute_force(inp, HW)
     finally:
         waf_mod.waf = orig
-    return got, want
+    return got, scalar, want
 
 
 @settings(max_examples=40, deadline=None)
@@ -73,9 +82,11 @@ def test_planner_dp_equals_bruteforce(data, m, n):
         tasks.append(_TableTask(table, weight, floor))
         assignment.append(data.draw(st.integers(min_value=0, max_value=n)))
         faulted.append(data.draw(st.booleans()))
-    got, want = _reward_tables(tasks, assignment, n, d_run=10.0, d_tr=2.0,
-                               faulted=faulted)
+    got, scalar, want = _reward_tables(tasks, assignment, n, d_run=10.0,
+                                       d_tr=2.0, faulted=faulted)
     assert abs(got.total_reward - want.total_reward) < 1e-6
+    assert abs(scalar.total_reward - want.total_reward) < 1e-6
+    assert got.assignment == scalar.assignment   # identical tie-breaking
     assert sum(got.assignment) <= n
 
 
