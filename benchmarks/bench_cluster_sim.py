@@ -1,0 +1,114 @@
+"""Cluster-scale scenario-engine benchmark (§7.5 at production scale).
+
+Runs the ``mixed_fleet`` scenario class (independent MTBF + correlated
+switch-domain bursts + slow-node degradation + preemption waves + task
+churn, ``core.scenarios``) through both simulator engines:
+
+* ``VectorSimulator`` + shared ``PlannerCache`` over a batch of
+  Monte-Carlo seeds — the cluster-scale engine;
+* ``TraceSimulator`` — the per-event scalar reference loop (eager,
+  uncached plan tables), timed on the fixed seed-0 scenario and
+  extrapolated linearly over the seed batch (its cost per seed is
+  independent: no state is shared between scalar runs).
+
+Hard asserts, so the harness fails loudly on a regression:
+
+* accumulated WAF of the vectorized engine matches the scalar reference
+  loop to 1e-6 on the fixed-seed scenario, for every policy;
+* at paper scale (n=1024 workers, m=32 tasks, 30-day trace, 16 seeds)
+  the engine-suite speedup is >= 50x.
+
+``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) runs only the small
+configuration; the full run records both, so CI's quick output can be
+gated against the committed baseline rows.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit, fleet_tasks
+from repro.core import scenarios
+from repro.core.simulator import TraceSimulator, run_monte_carlo
+from repro.core.traces import DAY
+
+SPEEDUP_FLOOR = 50.0
+REL_TOL = 1e-6
+GPN = 8
+
+CONFIGS = [
+    # name, n_nodes, m, span_days, seeds, mtbf_days, bursts, degr, waves,
+    # assert_floor
+    ("quick", 16, 6, 7, 4, 20, 1, 3, 1, False),
+    ("paper_scale", 128, 32, 30, 16, 30, 3, 8, 2, True),
+]
+
+
+def _scenario_fn(n_nodes, m, span_days, mtbf_days, bursts, degr, waves,
+                 tasks):
+    def make(seed):
+        return scenarios.mixed_fleet(
+            n_nodes=n_nodes, span_s=span_days * DAY, seed=seed,
+            gpus_per_node=GPN, m_initial=m, candidates=tasks[:4],
+            mtbf_node_s=mtbf_days * DAY, group_size=8, n_bursts=bursts,
+            n_degradations=degr, n_waves=waves,
+            wave_fraction=0.1)
+    return make
+
+
+def run() -> list:
+    quick = os.environ.get("REPRO_BENCH_QUICK") == "1"
+    configs = [c for c in CONFIGS if c[0] == "quick"] if quick else CONFIGS
+    rows = []
+    for (name, n_nodes, m, span_days, seeds, mtbf_days, bursts, degr,
+         waves, assert_floor) in configs:
+        tasks = fleet_tasks(m)
+        per = (n_nodes * GPN // m) // GPN * GPN
+        assignment = [per] * m
+        make = _scenario_fn(n_nodes, m, span_days, mtbf_days, bursts,
+                            waves=waves, degr=degr, tasks=tasks)
+        s0 = make(0)
+
+        mc = run_monte_carlo(tasks, assignment, make, seeds=range(seeds),
+                             n_nodes=n_nodes, gpus_per_node=GPN)
+        vec_total = sum(r.wall_s for r in mc.values())
+
+        scalar_total = 0.0
+        scalar_s, rel_errs = {}, {}
+        for policy, r in mc.items():
+            t0 = time.perf_counter()
+            ref = TraceSimulator(tasks, list(assignment), policy,
+                                 n_nodes=n_nodes,
+                                 gpus_per_node=GPN).run(s0)
+            scalar_s[policy] = time.perf_counter() - t0
+            scalar_total += scalar_s[policy]
+            rel = (abs(ref.accumulated_waf - r.per_seed[0])
+                   / max(abs(ref.accumulated_waf), 1.0))
+            rel_errs[policy] = rel
+            assert rel < REL_TOL, (name, policy, rel)
+
+        suite_speedup = scalar_total * seeds / vec_total
+        if assert_floor:
+            assert suite_speedup >= SPEEDUP_FLOOR, (
+                f"engine speedup {suite_speedup:.0f}x at {name} below the "
+                f"{SPEEDUP_FLOOR:.0f}x floor")
+            print(f"[floor check] {name} (n={n_nodes * GPN}, m={m}, "
+                  f"{seeds} seeds): {suite_speedup:.0f}x "
+                  f"(floor {SPEEDUP_FLOOR:.0f}x)")
+        for policy, r in mc.items():
+            rows.append({
+                "config": name, "policy": policy,
+                "workers": n_nodes * GPN, "tasks": m, "seeds": seeds,
+                "events": s0.n_events,
+                "vec_wall_s": r.wall_s,
+                "vec_per_seed_ms": r.wall_s / seeds * 1e3,
+                "scalar_seed_s": scalar_s[policy],
+                "waf_mean": r.waf_mean,
+                "waf_rel_err": rel_errs[policy],
+                "suite_speedup": suite_speedup,
+            })
+    emit(rows, "cluster_sim",
+         ["config", "policy", "workers", "tasks", "seeds", "events",
+          "vec_wall_s", "vec_per_seed_ms", "scalar_seed_s", "waf_mean",
+          "waf_rel_err", "suite_speedup"])
+    return rows

@@ -23,14 +23,10 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import emit, timeit
-from repro.configs import get_arch
-from repro.core import planner
-from repro.core.costmodel import A800, TaskModel
+from benchmarks.common import emit, fleet_tasks, timeit
+from repro.core.costmodel import A800
 from repro.core.planner import PlanInput, PlanTable, solve, solve_reference
-from repro.core.waf import Task
 
-SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
 GRID_N = [64, 128, 256, 512, 1024]
 GRID_M = [4, 8, 16, 32]
 # the scalar path is O(m n^2) Python per scenario: only time it where that
@@ -39,11 +35,7 @@ REF_LIMIT = (256, 16)
 SPEEDUP_FLOOR = 50.0      # hard floor at (n, m) == REF_LIMIT
 REL_TOL = 1e-6
 
-
-def _tasks(m: int):
-    return [Task(model=TaskModel.from_arch(get_arch(SIZES[i % len(SIZES)]),
-                                           global_batch=128 if i % 2 else 256),
-                 weight=0.5 + 0.1 * (i % 16)) for i in range(m)]
+_tasks = fleet_tasks
 
 
 def _rel_err(a: float, b: float) -> float:

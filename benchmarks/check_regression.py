@@ -1,0 +1,162 @@
+"""Benchmark regression gate.
+
+Compares a fresh ``run.py --quick`` output directory against the committed
+baselines under ``results/`` and fails (exit 1) on regressions.
+
+Gated metrics are machine-independent by construction — speedup ratios and
+deterministic model outputs — so the gate is robust to CI runners being
+slower or faster than the machine that recorded the baselines:
+
+* ``higher``: ratios (e.g. vectorized-vs-scalar speedups) must not drop
+  below ``baseline / slack``;
+* ``equal``: deterministic analytic-model outputs must match the baseline
+  to a tight relative tolerance (accidental cost-model drift is a
+  regression even when it is fast).
+
+Rows are matched by their key columns; fresh rows without a baseline
+counterpart (new configurations) and baseline rows the quick grid does not
+reproduce are skipped.
+
+Usage::
+
+    python benchmarks/check_regression.py \
+        --baseline results --fresh fresh-results --slack 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EQ_TOL = 1e-6
+
+SPECS = {
+    "planner_scale": {
+        "keys": ("workers", "tasks"),
+        "higher": ("solve_speedup", "rebuild_speedup"),
+        # sub-ms small-n measurements are too noisy for a ratio gate
+        "min_workers": 256,
+    },
+    "cluster_sim": {
+        "keys": ("config", "policy"),
+        "higher": ("suite_speedup",),
+        "equal": ("waf_mean", "events"),
+    },
+    "costmodel": {
+        "keys": ("hw", "model", "workers"),
+        "equal": ("agg_tflops", "dp", "tp", "pp"),
+    },
+    "detection": {
+        "keys": ("case", "method"),
+        "equal": ("unicron_s", "baseline_s"),
+        "skip_key_prefix": "overhead",  # measured latencies, not model output
+    },
+    "transition": {
+        "keys": ("gpus",),
+        "equal": ("unicron_s", "megatron_s", "oobleck_s", "bamboo_s"),
+    },
+}
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _num(value):
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
+def check_bench(name, spec, baseline_rows, fresh_rows, slack):
+    """Returns a list of violation strings for one benchmark."""
+    keys = spec["keys"]
+
+    def key_of(row):
+        return tuple(str(row.get(k)) for k in keys)
+
+    baseline = {key_of(r): r for r in baseline_rows}
+    violations = []
+    compared = 0
+    for row in fresh_rows:
+        key = key_of(row)
+        prefix = spec.get("skip_key_prefix")
+        if prefix and any(part.startswith(prefix) for part in key):
+            continue
+        min_workers = spec.get("min_workers")
+        if min_workers is not None:
+            workers = _num(row.get("workers"))
+            if workers is None or workers < min_workers:
+                continue
+        base = baseline.get(key)
+        if base is None:
+            continue
+        for metric in spec.get("higher", ()):
+            fresh_v, base_v = _num(row.get(metric)), _num(base.get(metric))
+            if fresh_v is None or base_v is None or base_v <= 0:
+                continue
+            compared += 1
+            if fresh_v < base_v / slack:
+                violations.append(
+                    f"{name}{key}: {metric} {fresh_v:.3g} < "
+                    f"baseline {base_v:.3g} / slack {slack:g}"
+                )
+        for metric in spec.get("equal", ()):
+            fresh_v, base_v = _num(row.get(metric)), _num(base.get(metric))
+            if fresh_v is None or base_v is None:
+                continue
+            compared += 1
+            denom = max(abs(base_v), 1.0)
+            if abs(fresh_v - base_v) / denom > EQ_TOL:
+                violations.append(
+                    f"{name}{key}: {metric} {fresh_v!r} != "
+                    f"baseline {base_v!r} (tol {EQ_TOL:g})"
+                )
+    print(f"[{name}] {compared} metric comparisons, {len(violations)} violations")
+    return violations
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--baseline", default="results")
+    parser.add_argument("--fresh", default="fresh-results")
+    parser.add_argument(
+        "--slack",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_SLACK", "2.0")),
+        help="allowed ratio degradation factor (default 2.0)",
+    )
+    args = parser.parse_args(argv)
+
+    violations = []
+    checked = 0
+    for name, spec in SPECS.items():
+        baseline_path = os.path.join(args.baseline, f"bench_{name}.json")
+        fresh_path = os.path.join(args.fresh, f"bench_{name}.json")
+        if not os.path.exists(fresh_path):
+            continue  # bench not part of this (quick) run
+        if not os.path.exists(baseline_path):
+            print(f"[{name}] no committed baseline — skipping")
+            continue
+        checked += 1
+        violations += check_bench(
+            name, spec, _load(baseline_path), _load(fresh_path), args.slack
+        )
+    if checked == 0:
+        print("no benchmarks compared — wrong --fresh directory?")
+        return 1
+    if violations:
+        print(f"\n{len(violations)} regression(s):")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

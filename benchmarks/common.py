@@ -50,3 +50,18 @@ def case5_tasks():
                   weight=w) for s, w in zip(sizes, weights)]
     assignment = [16, 16, 16, 24, 24, 32]
     return tasks, assignment
+
+
+FLEET_SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+
+
+def fleet_tasks(m: int):
+    """m heterogeneous tasks cycling the GPT-3 family with varied weights
+    and batch sizes — the multi-task fleet of the scale benchmarks."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import TaskModel
+    from repro.core.waf import Task
+    return [Task(model=TaskModel.from_arch(
+                     get_arch(FLEET_SIZES[i % len(FLEET_SIZES)]),
+                     global_batch=128 if i % 2 else 256),
+                 weight=0.5 + 0.1 * (i % 16)) for i in range(m)]

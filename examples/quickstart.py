@@ -6,7 +6,6 @@ import argparse
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch, list_archs

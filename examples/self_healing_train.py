@@ -21,7 +21,6 @@ import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
@@ -34,7 +33,7 @@ from repro.core.resumption import run_iteration_with_failure
 from repro.data.pipeline import SyntheticLM
 from repro.models.model import build_model
 from repro.optim import AdamW, cosine_with_warmup
-from repro.train.state import TrainState, init_train_state
+from repro.train.state import init_train_state
 from repro.train.step import finalize_step, make_grad_fn
 
 DP, N_MICRO, MB, SEQ = 4, 8, 2, 128

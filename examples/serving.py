@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.data.pipeline import SyntheticLM
 from repro.models.model import build_model
-from repro.serve.decode import RequestBatcher, generate
+from repro.serve.decode import RequestBatcher
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 

@@ -13,8 +13,7 @@ charges per-tier costs) know which tier satisfied the request.
 """
 from __future__ import annotations
 
-import os
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 from repro.checkpoint import inmemory, persistent
 

@@ -7,9 +7,7 @@ examples and tests.
 """
 from __future__ import annotations
 
-import json
 import os
-import re
 from typing import Any, Optional
 
 import jax

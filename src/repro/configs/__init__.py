@@ -29,4 +29,7 @@ __all__ = [
     "ArchConfig", "AttnConfig", "MLAConfig", "MoEConfig", "SSMConfig",
     "ShapeConfig", "SHAPES", "get_arch", "list_archs", "register",
     "supports_shape", "ASSIGNED_ARCHS", "ALL_ARCHS",
+    "QWEN3_4B", "ZAMBA2_1P2B", "GEMMA3_12B", "DEEPSEEK_V3_671B",
+    "GRANITE_MOE_3B", "MAMBA2_780M", "INTERNVL2_2B", "GEMMA_2B",
+    "HUBERT_XLARGE", "GRANITE_3_8B",
 ]

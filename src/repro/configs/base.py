@@ -11,7 +11,7 @@ long_500k) are :class:`ShapeConfig` instances in ``SHAPES``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

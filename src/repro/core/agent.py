@@ -10,11 +10,11 @@ discrete-event simulator; its *state machine* is the real code below.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
-from repro.core.detection import (ErrorKind, Method, OnlineStatMonitor,
-                                  classify, detection_time)
+from repro.core.detection import (ErrorKind, OnlineStatMonitor, classify,
+                                  detection_time)
 from repro.core.kvstore import KVStore
 
 HEARTBEAT_INTERVAL_S = 2.0

@@ -1,8 +1,8 @@
 """Cluster state: nodes, GPU workers, task placements."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 
 @dataclass

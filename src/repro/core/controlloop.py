@@ -18,15 +18,14 @@ the discrete-event simulator and the real examples share it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.agent import UnicronAgent
 from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
-from repro.core.detection import ErrorKind, Severity, classify
-from repro.core.handling import Action, HandlingDecision, Trigger
-from repro.core.kvstore import KVStore
+from repro.core.detection import ErrorKind
+from repro.core.handling import Action, Trigger
 
 
 @dataclass
@@ -34,7 +33,7 @@ class LoopEvent:
     """One decision taken by the control loop (for logs / tests)."""
     time: float
     node: int
-    kind: ErrorKind
+    kind: Optional[ErrorKind]                # None: task churn, not an error
     action: Action
     plan: Optional[Tuple[int, ...]] = None
     plan_latency_s: Optional[float] = None   # dispatch latency (lookup/solve)
@@ -116,6 +115,32 @@ class ControlLoop:
             plan_s = self.coord.plan_stats.last_dispatch_s
         self.coord.close_case(case_id)
         return LoopEvent(now, node, kind, decision.action, plan, plan_s)
+
+    # ---- task churn entry points (Figure 7 triggers 5 and 6) --------------
+
+    def task_finished(self, now: float, task_index: int) -> LoopEvent:
+        """A task completed: free its workers and replan the remainder."""
+        plan = self.coord.task_finished(task_index,
+                                        self.cluster.healthy_workers())
+        self.cluster.assign(list(plan.assignment))
+        ev = LoopEvent(now, -1, None, Action.RESUME,
+                       plan.assignment,
+                       self.coord.plan_stats.last_dispatch_s)
+        self.events.append(ev)
+        return ev
+
+    def task_launched(self, now: float, task,
+                      avg_iter_s: float = 30.0) -> LoopEvent:
+        """A new task was admitted: replan the whole cluster around it."""
+        plan = self.coord.task_launched(task,
+                                        self.cluster.healthy_workers(),
+                                        avg_iter_s=avg_iter_s)
+        self.cluster.assign(list(plan.assignment))
+        ev = LoopEvent(now, -1, None, Action.RESUME,
+                       plan.assignment,
+                       self.coord.plan_stats.last_dispatch_s)
+        self.events.append(ev)
+        return ev
 
     # ---- escalation entry point (agents report an action failed) ----------
 

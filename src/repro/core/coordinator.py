@@ -8,14 +8,13 @@ time; every decision here is the real algorithm.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import planner, transition, waf as waf_mod
+from repro.core import planner, waf as waf_mod
 from repro.core.costmodel import Hardware
-from repro.core.detection import ErrorKind, Severity, classify
-from repro.core.handling import (Action, FailureCase, HandlingDecision,
-                                 Trigger, decide)
+from repro.core.detection import ErrorKind
+from repro.core.handling import FailureCase, HandlingDecision, Trigger, decide
 from repro.core.kvstore import KVStore
 from repro.core.planner import Plan, PlanInput, PlanTable
 from repro.core.waf import Task
@@ -43,13 +42,29 @@ class PlanStats:
     fresh_solves: int = 0
     fresh_solve_s: float = 0.0         # cumulative
     last_dispatch_s: float = 0.0       # latency of the last plan_for()
+    task_launches: int = 0
+    task_finishes: int = 0
 
 
 class UnicronCoordinator:
     def __init__(self, tasks: List[Task], assignment: List[int],
                  hw: Hardware, kv: Optional[KVStore] = None,
                  mtbf_per_worker_s: float = 30 * 86400.0,
-                 d_transition_s: float = 120.0):
+                 d_transition_s: float = 120.0,
+                 plan_cache: Optional[planner.PlannerCache] = None,
+                 n_cluster_workers: Optional[int] = None,
+                 workers_per_node: int = 8):
+        """``plan_cache``: share a ``PlannerCache`` across coordinators —
+        plan tables become lazy (scenarios assembled on first lookup) and
+        rows/prefix-suffix DPs/solves are reused across rebuilds, with
+        plans float-identical to the eager uncached build.
+
+        ``n_cluster_workers``: total cluster capacity.  When given,
+        D_running (Eq. 3) is the expected time to the next failure of the
+        WHOLE cluster — failures arrive per node over the full fleet, not
+        just the assigned workers — and the planner's DP arrays are sized
+        once for that capacity, which keeps plan values comparable (and
+        cache keys identical) across rebuilds at different totals."""
         self.hw = hw
         self.kv = kv or KVStore()
         self.entries: List[TaskEntry] = [
@@ -58,10 +73,17 @@ class UnicronCoordinator:
             for t, x in zip(tasks, assignment)]
         self.mtbf = mtbf_per_worker_s
         self.d_transition = d_transition_s
+        self.n_cluster = n_cluster_workers
+        self.workers_per_node = workers_per_node
         self.open_cases: Dict[str, FailureCase] = {}
         self._table: Optional[PlanTable] = None
+        self.plan_cache = plan_cache
         self.plan_stats = PlanStats()
         self.refresh_plan_table()
+
+    def _d_running(self, n_workers: int) -> float:
+        return waf_mod.expected_run_duration(self.n_cluster or n_workers,
+                                             self.mtbf)
 
     # ---- plan generation -------------------------------------------------
 
@@ -69,21 +91,33 @@ class UnicronCoordinator:
                     faulted_task: Optional[int]) -> PlanInput:
         tasks = tuple(e.task for e in self.entries)
         assignment = tuple(e.n_workers for e in self.entries)
-        d_run = waf_mod.expected_run_duration(n_workers, self.mtbf)
-        return PlanInput(tasks, assignment, n_workers, d_run,
-                         self.d_transition,
+        return PlanInput(tasks, assignment, n_workers,
+                         self._d_running(n_workers), self.d_transition,
                          tuple(i == faulted_task
                                for i in range(len(tasks))))
 
     def refresh_plan_table(self) -> None:
         """Precompute one-step lookahead plans (§5.2) for O(1) dispatch,
         via the incremental vectorized build (shared reward rows +
-        prefix/suffix DPs)."""
+        prefix/suffix DPs).  With a ``plan_cache`` the table is lazy and
+        chain-cached across rebuilds: a recurring cluster state costs a
+        dict hit, a near state only the chains past the change."""
         assignment = [e.n_workers for e in self.entries]
-        d_run = waf_mod.expected_run_duration(sum(assignment), self.mtbf)
+        d_run = self._d_running(sum(assignment))
+        w = self.workers_per_node
+        n_budget = (self.n_cluster + w) if self.n_cluster else None
         t0 = time.perf_counter()
-        self._table = PlanTable([e.task for e in self.entries], assignment,
-                                self.hw, d_run, self.d_transition)
+        tasks = [e.task for e in self.entries]
+        if self.plan_cache is not None:
+            self._table = self.plan_cache.table(tasks, assignment, self.hw,
+                                                d_run, self.d_transition,
+                                                workers_per_fault=w,
+                                                n_budget=n_budget)
+        else:
+            self._table = PlanTable(tasks, assignment, self.hw, d_run,
+                                    self.d_transition,
+                                    workers_per_fault=w,
+                                    n_budget=n_budget)
         dt = time.perf_counter() - t0
         self.plan_stats.table_rebuilds += 1
         self.plan_stats.table_rebuild_s += dt
@@ -99,12 +133,8 @@ class UnicronCoordinator:
                 self.plan_stats.lookup_hits += 1
                 self.plan_stats.last_dispatch_s = time.perf_counter() - t0
                 return hit, True
-        plan = planner.solve(self._plan_input(n_workers, faulted_task),
-                             self.hw)
-        dt = time.perf_counter() - t0
-        self.plan_stats.fresh_solves += 1
-        self.plan_stats.fresh_solve_s += dt
-        self.plan_stats.last_dispatch_s = dt
+        plan = self._fresh_plan(n_workers, faulted_task)
+        self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         return plan, False
 
     # ---- error handling ----------------------------------------------------
@@ -146,6 +176,60 @@ class UnicronCoordinator:
             self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         for e, x in zip(self.entries, plan.assignment):
             e.n_workers = x
+        self.refresh_plan_table()
+        return plan
+
+    # ---- task churn (Figure 7 triggers 5 and 6) ---------------------------
+
+    def _fresh_plan(self, n_workers_now: int,
+                    faulted_task: Optional[int] = None) -> Plan:
+        """Single fresh-dispatch path: memoized ``solve_fast`` under a
+        plan cache, plain ``solve`` otherwise, with solve-time stats."""
+        t0 = time.perf_counter()
+        inp = self._plan_input(n_workers_now, faulted_task)
+        if self.plan_cache is not None:
+            plan = self.plan_cache.solve(inp, self.hw)
+        else:
+            plan = planner.solve(inp, self.hw)
+        self.plan_stats.fresh_solves += 1
+        self.plan_stats.fresh_solve_s += time.perf_counter() - t0
+        return plan
+
+    def task_finished(self, task_index: int, n_workers_now: int) -> Plan:
+        """Trigger (5): the finished task's workers return to the pool and
+        the remaining tasks are replanned — lookup table first (the
+        ``finish:i`` scenario), fresh solve on a scenario mismatch."""
+        t0 = time.perf_counter()
+        plan = None
+        if self._table is not None:
+            cand = self._table.lookup(f"finish:{task_index}")
+            if cand is not None and sum(cand.assignment) <= n_workers_now:
+                plan = cand
+                self.plan_stats.lookup_hits += 1
+        self.entries.pop(task_index)
+        if plan is None:
+            plan = self._fresh_plan(n_workers_now)
+        for e, x in zip(self.entries, plan.assignment):
+            e.n_workers = x
+        self.plan_stats.task_finishes += 1
+        self.plan_stats.last_dispatch_s = time.perf_counter() - t0
+        self.refresh_plan_table()
+        return plan
+
+    def task_launched(self, task: Task, n_workers_now: int,
+                      avg_iter_s: float = 30.0) -> Plan:
+        """Trigger (6): admit a task (x_old = 0) and replan the whole
+        cluster.  There is no precomputed scenario for launches, so this
+        is always a fresh solve (memoized under a plan cache)."""
+        self.entries.append(TaskEntry(task=task, n_workers=0,
+                                      avg_iter_s=avg_iter_s,
+                                      state_bytes=16.0 * task.model.n_params))
+        t0 = time.perf_counter()
+        plan = self._fresh_plan(n_workers_now)
+        for e, x in zip(self.entries, plan.assignment):
+            e.n_workers = x
+        self.plan_stats.task_launches += 1
+        self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         self.refresh_plan_table()
         return plan
 

@@ -320,6 +320,17 @@ def throughput_curve(task: TaskModel, n: int,
                            cached.configs)
 
 
+def throughput_matrix(tasks, n: int, hw: Hardware = A800) -> np.ndarray:
+    """T(t_i, x) for every task as one (m, n+1) matrix, assembled from the
+    memoized per-task sweeps — the vectorized cluster simulator gathers
+    whole worker-count columns out of this instead of calling the analytic
+    model per (task, x)."""
+    out = np.empty((len(tasks), n + 1))
+    for i, t in enumerate(tasks):
+        out[i] = throughput_curve(t, n, hw).flops[:n + 1]
+    return out
+
+
 def min_feasible_workers(task: TaskModel, hw: Hardware = A800,
                          upper: int = 4096) -> int:
     """Smallest x with a feasible plan (T_necessary floor).

@@ -104,6 +104,18 @@ class OnlineStatMonitor:
     window: int = 64
     _hist: Deque[float] = field(default_factory=deque)
 
+    @classmethod
+    def primed(cls, avg_iter_s: float, window: int = 64,
+               n_obs: Optional[int] = None) -> "OnlineStatMonitor":
+        """A monitor warmed with a steady-state iteration history, as a
+        task that has been training for a while would have — the simulator
+        and the scenario tests use this to ask whether a slow-node event
+        trips the 1.1x degradation margin (Fig. 6)."""
+        mon = cls(window=window)
+        for _ in range(n_obs if n_obs is not None else window):
+            mon.observe(avg_iter_s)
+        return mon
+
     def observe(self, iter_s: float) -> None:
         self._hist.append(iter_s)
         if len(self._hist) > self.window:

@@ -12,8 +12,7 @@ Plus the non-failure triggers that also enter reconfiguration: node join
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from repro.core.detection import ErrorKind, Severity, classify
 

@@ -6,7 +6,7 @@ coordinator consolidates agent-reported process statuses here (§3.2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 

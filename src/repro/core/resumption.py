@@ -25,7 +25,6 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.train.step import accumulate
 

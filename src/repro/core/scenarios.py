@@ -1,0 +1,315 @@
+"""Failure-scenario library — seeded, parameterized cluster traces.
+
+Each generator returns a :class:`ClusterScenario` whose events all flow
+through the real detection -> severity -> planner -> transition path in
+``core.simulator``.  Mapping to the paper and the related fleet studies
+(PAPERS.md):
+
+``independent_failures``
+    Per-node Poisson faults with the §2.2 severity mix (73% transient) —
+    the generalization of the §7.5 trace-a/trace-b workloads behind
+    Fig. 11, scaled to arbitrary (nodes, span, MTBF).
+``correlated_failures``
+    Switch/rack-domain bursts: every failure in a burst lands inside one
+    node group and the group returns together, the dominant correlated
+    mode in ByteDance's robust-training report and Meta's reliability
+    characterization.
+``slow_nodes``
+    Slow-node degradation feeding the §4.1 online statistical monitor
+    (Fig. 6): a sub-3x slowdown is invisible to baseline watchdogs but
+    trips Unicron's 1.1x degradation margin.
+``preemption_waves``
+    Spot/preemption waves: a fraction of nodes is reclaimed at once and
+    re-provisioned later — beyond the paper, standard in spot fleets.
+``task_churn``
+    Multi-task join/finish churn, the Figure 7 reconfiguration triggers
+    (5) task finished and (6) task launched at cluster scale (§5.2).
+``mixed_fleet``
+    All of the above superimposed — the §7.5-style multi-task sweep at
+    (n=1024, m=32) that ``benchmarks/bench_cluster_sim.py`` reproduces.
+
+Generators draw from ``numpy.random.default_rng(seed)`` only: identical
+seeds produce identical scenarios, and batches of Monte-Carlo seeds are
+vectorized draws, not per-event Python loops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detection import ErrorKind
+from repro.core.traces import (DAY, NON_SEV1_KINDS, SEV1_KINDS, FailureEvent,
+                               poisson_times, sample_kinds)
+from repro.core.waf import Task
+
+
+@dataclass(frozen=True)
+class DegradationEvent:
+    """A node turns slow (not dead): iteration time inflates by
+    ``slowdown`` for ``duration_s`` seconds (§4.1 / Fig. 6)."""
+    time: float
+    node: int
+    slowdown: float            # iteration-time multiplier, >= 1
+    duration_s: float
+
+
+@dataclass(frozen=True)
+class TaskArrival:
+    """A new task is admitted to the cluster (Figure 7 trigger 6)."""
+    time: float
+    task: Task
+    workers_hint: int = 0      # baseline policies grant min(hint, free)
+
+
+@dataclass(frozen=True)
+class TaskFinish:
+    """Task in simulator slot ``slot`` completes (Figure 7 trigger 5)."""
+    time: float
+    slot: int
+
+
+@dataclass(frozen=True)
+class NodeGroups:
+    """Failure domains (switch/rack): ``groups[g]`` lists node ids that
+    share fate under a correlated failure."""
+    groups: Tuple[Tuple[int, ...], ...]
+
+    @classmethod
+    def contiguous(cls, n_nodes: int, group_size: int) -> "NodeGroups":
+        return cls(tuple(
+            tuple(range(lo, min(lo + group_size, n_nodes)))
+            for lo in range(0, n_nodes, group_size)))
+
+    def group_of(self, node: int) -> int:
+        for gi, g in enumerate(self.groups):
+            if node in g:
+                return gi
+        raise ValueError(f"node {node} not in any group")
+
+
+@dataclass
+class ClusterScenario:
+    """One seeded cluster trace: failures + degradations + task churn."""
+    name: str
+    n_nodes: int
+    gpus_per_node: int
+    span_s: float
+    failures: List[FailureEvent] = field(default_factory=list)
+    degradations: List[DegradationEvent] = field(default_factory=list)
+    churn: List[object] = field(default_factory=list)   # TaskArrival/Finish
+    groups: Optional[NodeGroups] = None
+    seed: Optional[int] = None
+
+    def merged(self, other: "ClusterScenario",
+               name: Optional[str] = None) -> "ClusterScenario":
+        assert (self.n_nodes, self.gpus_per_node) == \
+            (other.n_nodes, other.gpus_per_node)
+        return ClusterScenario(
+            name=name or f"{self.name}+{other.name}",
+            n_nodes=self.n_nodes, gpus_per_node=self.gpus_per_node,
+            span_s=max(self.span_s, other.span_s),
+            failures=sorted(self.failures + other.failures,
+                            key=lambda e: e.time),
+            degradations=sorted(self.degradations + other.degradations,
+                                key=lambda e: e.time),
+            churn=sorted(self.churn + other.churn, key=lambda e: e.time),
+            groups=self.groups or other.groups, seed=self.seed)
+
+    @property
+    def n_events(self) -> int:
+        return (len(self.failures) + len(self.degradations)
+                + len(self.churn))
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+
+def independent_failures(*, n_nodes: int, span_s: float, seed: int,
+                         gpus_per_node: int = 8,
+                         mtbf_node_s: float = 60 * DAY,
+                         sev1_fraction: float = 0.27,
+                         repair_s: Tuple[float, float] = (2 * 3600.0,
+                                                          12 * 3600.0)
+                         ) -> ClusterScenario:
+    """Per-node Poisson faults, §2.2 mix (default 27% SEV1 node loss)."""
+    rng = np.random.default_rng(seed)
+    times = poisson_times(rng, n_nodes / mtbf_node_s, span_s)
+    n = times.size
+    nodes = rng.integers(0, n_nodes, size=n)
+    is_sev1 = rng.random(n) < sev1_fraction
+    sev1_kinds = sample_kinds(rng, SEV1_KINDS, int(is_sev1.sum()))
+    other_kinds = sample_kinds(rng, NON_SEV1_KINDS, int(n - is_sev1.sum()))
+    repairs = rng.uniform(repair_s[0], repair_s[1], size=n)
+    events, i1, i2 = [], 0, 0
+    for i in range(n):
+        if is_sev1[i]:
+            kind, rep = sev1_kinds[i1], float(repairs[i])
+            i1 += 1
+        else:
+            kind, rep = other_kinds[i2], None
+            i2 += 1
+        events.append(FailureEvent(time=float(times[i]),
+                                   node=int(nodes[i]), kind=kind,
+                                   repair_s=rep))
+    return ClusterScenario("independent", n_nodes, gpus_per_node, span_s,
+                           failures=events, seed=seed)
+
+
+def correlated_failures(*, n_nodes: int, span_s: float, seed: int,
+                        gpus_per_node: int = 8, group_size: int = 8,
+                        n_bursts: int = 4, burst_span_s: float = 120.0,
+                        hit_fraction: float = 0.75,
+                        outage_s: Tuple[float, float] = (1800.0, 4 * 3600.0)
+                        ) -> ClusterScenario:
+    """Switch-domain bursts: each burst drops ``hit_fraction`` of one node
+    group within ``burst_span_s`` and the whole group returns together."""
+    rng = np.random.default_rng(seed)
+    groups = NodeGroups.contiguous(n_nodes, group_size)
+    onsets = np.sort(rng.uniform(0, span_s, size=n_bursts))
+    events: List[FailureEvent] = []
+    for onset in onsets:
+        gi = int(rng.integers(0, len(groups.groups)))
+        outage = float(rng.uniform(*outage_s))
+        members = np.array(groups.groups[gi])
+        hit = members[rng.random(members.size) < hit_fraction]
+        offsets = rng.uniform(0, burst_span_s, size=hit.size)
+        for node, off in zip(hit, offsets):
+            t = float(onset + off)
+            events.append(FailureEvent(
+                time=t, node=int(node), kind=ErrorKind.LOST_CONNECTION,
+                repair_s=max(float(onset) + outage - t, 60.0)))
+    events.sort(key=lambda e: e.time)
+    return ClusterScenario("correlated", n_nodes, gpus_per_node, span_s,
+                           failures=events, groups=groups, seed=seed)
+
+
+def slow_nodes(*, n_nodes: int, span_s: float, seed: int,
+               gpus_per_node: int = 8, n_events: int = 8,
+               slowdown: Tuple[float, float] = (1.15, 2.5),
+               duration_s: Tuple[float, float] = (3600.0, 8 * 3600.0)
+               ) -> ClusterScenario:
+    """Slow-node degradation for the §4.1 statistical monitor: slowdowns
+    default to >= 1.15x so every event clears the 1.1x margin (Fig. 6)
+    while staying below the 3x failure threshold."""
+    rng = np.random.default_rng(seed)
+    times = np.sort(rng.uniform(0, span_s, size=n_events))
+    nodes = rng.integers(0, n_nodes, size=n_events)
+    slows = rng.uniform(slowdown[0], slowdown[1], size=n_events)
+    durs = rng.uniform(duration_s[0], duration_s[1], size=n_events)
+    events = [DegradationEvent(time=float(t), node=int(nd),
+                               slowdown=float(s), duration_s=float(d))
+              for t, nd, s, d in zip(times, nodes, slows, durs)]
+    return ClusterScenario("slow_nodes", n_nodes, gpus_per_node, span_s,
+                           degradations=events, seed=seed)
+
+
+def preemption_waves(*, n_nodes: int, span_s: float, seed: int,
+                     gpus_per_node: int = 8, n_waves: int = 3,
+                     wave_fraction: float = 0.2,
+                     reprovision_s: Tuple[float, float] = (1800.0, 7200.0)
+                     ) -> ClusterScenario:
+    """Spot-preemption waves: ``wave_fraction`` of the fleet is reclaimed
+    near-simultaneously and re-provisioned after a delay."""
+    rng = np.random.default_rng(seed)
+    onsets = np.sort(rng.uniform(0, span_s, size=n_waves))
+    events: List[FailureEvent] = []
+    for onset in onsets:
+        k = max(1, int(round(wave_fraction * n_nodes)))
+        nodes = rng.choice(n_nodes, size=k, replace=False)
+        reprov = rng.uniform(reprovision_s[0], reprovision_s[1], size=k)
+        offsets = rng.uniform(0, 30.0, size=k)     # reclaim skew
+        for node, off, rep in zip(nodes, offsets, reprov):
+            events.append(FailureEvent(
+                time=float(onset + off), node=int(node),
+                kind=ErrorKind.LOST_CONNECTION, repair_s=float(rep)))
+    events.sort(key=lambda e: e.time)
+    return ClusterScenario("preemption", n_nodes, gpus_per_node, span_s,
+                           failures=events, seed=seed)
+
+
+def task_churn(*, span_s: float, seed: int, n_nodes: int,
+               gpus_per_node: int = 8, m_initial: int,
+               candidates: Sequence[Task], n_arrivals: int = 2,
+               n_finishes: int = 2, workers_hint: int = 32
+               ) -> ClusterScenario:
+    """Join/finish churn (Figure 7 triggers 5 and 6): ``n_finishes``
+    distinct initial slots complete, ``n_arrivals`` tasks from the
+    candidate catalog are admitted."""
+    rng = np.random.default_rng(seed)
+    n_finishes = min(n_finishes, m_initial)
+    churn: List[object] = []
+    slots = rng.choice(m_initial, size=n_finishes, replace=False)
+    for slot, t in zip(slots, rng.uniform(0.2 * span_s, 0.9 * span_s,
+                                          size=n_finishes)):
+        churn.append(TaskFinish(time=float(t), slot=int(slot)))
+    picks = rng.integers(0, len(candidates), size=n_arrivals)
+    for pick, t in zip(picks, rng.uniform(0.1 * span_s, 0.8 * span_s,
+                                          size=n_arrivals)):
+        churn.append(TaskArrival(time=float(t), task=candidates[int(pick)],
+                                 workers_hint=workers_hint))
+    churn.sort(key=lambda e: e.time)
+    return ClusterScenario("churn", n_nodes, gpus_per_node, span_s,
+                           churn=churn, seed=seed)
+
+
+def mixed_fleet(*, n_nodes: int, span_s: float, seed: int,
+                gpus_per_node: int = 8, m_initial: int = 0,
+                candidates: Sequence[Task] = (),
+                mtbf_node_s: float = 60 * DAY, group_size: int = 8,
+                n_bursts: int = 2, n_degradations: int = 6,
+                n_waves: int = 2, wave_fraction: float = 0.2,
+                n_arrivals: int = 2, n_finishes: int = 2
+                ) -> ClusterScenario:
+    """Everything at once — the cluster-scale workload of
+    ``benchmarks/bench_cluster_sim.py`` (§7.5 at n=1024, m=32)."""
+    base = independent_failures(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 1,
+        gpus_per_node=gpus_per_node, mtbf_node_s=mtbf_node_s)
+    out = base.merged(correlated_failures(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 2,
+        gpus_per_node=gpus_per_node, group_size=group_size,
+        n_bursts=n_bursts))
+    out = out.merged(slow_nodes(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 3,
+        gpus_per_node=gpus_per_node, n_events=n_degradations))
+    out = out.merged(preemption_waves(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 4,
+        gpus_per_node=gpus_per_node, n_waves=n_waves,
+        wave_fraction=wave_fraction))
+    if m_initial and len(candidates) and (n_arrivals or n_finishes):
+        out = out.merged(task_churn(
+            span_s=span_s, seed=seed * 10 + 5, n_nodes=n_nodes,
+            gpus_per_node=gpus_per_node, m_initial=m_initial,
+            candidates=candidates, n_arrivals=n_arrivals,
+            n_finishes=n_finishes))
+    out.name, out.seed = "mixed_fleet", seed
+    return out
+
+
+def scenario_suite(*, n_nodes: int, span_s: float, seed: int,
+                   gpus_per_node: int = 8, m_initial: int = 0,
+                   candidates: Sequence[Task] = ()) -> dict:
+    """One representative scenario per class, all on the same cluster
+    shape — the sweep ``bench_cluster_sim`` and the tests iterate."""
+    return {
+        "independent": independent_failures(
+            n_nodes=n_nodes, span_s=span_s, seed=seed,
+            gpus_per_node=gpus_per_node),
+        "correlated": correlated_failures(
+            n_nodes=n_nodes, span_s=span_s, seed=seed,
+            gpus_per_node=gpus_per_node),
+        "slow_nodes": slow_nodes(
+            n_nodes=n_nodes, span_s=span_s, seed=seed,
+            gpus_per_node=gpus_per_node),
+        "preemption": preemption_waves(
+            n_nodes=n_nodes, span_s=span_s, seed=seed,
+            gpus_per_node=gpus_per_node),
+        "mixed_fleet": mixed_fleet(
+            n_nodes=n_nodes, span_s=span_s, seed=seed,
+            gpus_per_node=gpus_per_node, m_initial=m_initial,
+            candidates=candidates),
+    }

@@ -7,7 +7,7 @@ F(t, ·) / G(t, ·) rows at once from the memoized cost-model sweep, which is
 what the vectorized planner consumes."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -55,6 +55,16 @@ def waf_curve(task: Task, n: int, hw: Hardware) -> np.ndarray:
     F = task.weight * curve.flops[:n + 1]          # fresh array (not a view)
     floor = task.necessary(hw)
     F[:min(max(floor, 1), n + 1)] = 0.0
+    return F
+
+
+def waf_matrix(tasks, n: int, hw: Hardware) -> np.ndarray:
+    """F(t_i, ·) for every task as one (m, n+1) matrix (Eq. 2 rows): the
+    vectorized simulator's WAF integrand is a gather out of this."""
+    F = costmodel.throughput_matrix([t.model for t in tasks], n, hw)
+    for i, t in enumerate(tasks):
+        F[i] *= t.weight
+        F[i, :min(max(t.necessary(hw), 1), n + 1)] = 0.0
     return F
 
 

@@ -7,7 +7,6 @@ intentionally share code with the model's own jnp paths so that switching
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -26,12 +26,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_arch, supports_shape
-from repro.configs.base import ArchConfig, ShapeConfig
-from repro.launch import hlo_analysis, hlo_stats
-from repro.launch.inputs import (batch_struct, decode_specs, input_specs,
-                                 n_micro_for)
-from repro.launch.mesh import (DCN_BW, HBM_BW, HBM_BYTES, ICI_BW,
-                               PEAK_FLOPS_BF16, make_production_mesh)
+from repro.configs.base import ArchConfig
+from repro.launch import hlo_analysis
+from repro.launch.inputs import decode_specs, input_specs, n_micro_for
+from repro.launch.mesh import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
 from repro.models.model import build_model
 from repro.optim import AdamW, constant
 from repro.serve.decode import make_serve_step

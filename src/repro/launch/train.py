@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
@@ -27,7 +26,7 @@ from repro.core.resumption import run_iteration_with_failure
 from repro.data.pipeline import SyntheticLM, stack_microbatches
 from repro.models.model import build_model
 from repro.optim import AdamW, cosine_with_warmup
-from repro.train.state import TrainState, init_train_state
+from repro.train.state import init_train_state
 from repro.train.step import finalize_step, make_grad_fn, make_train_step
 
 

@@ -11,7 +11,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.models import layers
 

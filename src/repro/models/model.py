@@ -18,14 +18,13 @@ static per slot.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import (ArchConfig, BLOCK_HYBRID_SHARED,
-                                BLOCK_MLA_DENSE)
+from repro.configs.base import ArchConfig, BLOCK_HYBRID_SHARED, BLOCK_MLA_DENSE
 from repro.models import blocks, layers
 
 MTP_WEIGHT = 0.3

@@ -6,9 +6,8 @@ token.  ``prefill``/``generate`` drive real decoding for the examples.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -14,12 +14,11 @@ its largest unsharded dim over the data axes, which is what makes the
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
 
 
 # ---------------------------------------------------------------------------

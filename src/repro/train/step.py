@@ -14,7 +14,7 @@ Two execution paths with *identical semantics* (tested):
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ import pytest
 from repro.checkpoint.inmemory import InMemoryStore
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint import persistent
-from repro.core import transition
 from repro.core.transition import (estimate_baseline, estimate_unicron,
                                    migrate_seconds, migration_source)
 

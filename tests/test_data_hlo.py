@@ -1,5 +1,4 @@
 """Data pipeline modality paths + HLO analyzer loop handling."""
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch

@@ -5,8 +5,7 @@ from repro.core.agent import UnicronAgent
 from repro.core.detection import (BASELINE_TIMEOUT_S, ERROR_TABLE, ErrorKind,
                                   Method, OnlineStatMonitor, Severity,
                                   classify, detection_time)
-from repro.core.handling import (Action, FailureCase, Trigger, action_for,
-                                 decide, escalate)
+from repro.core.handling import Action, FailureCase, action_for, decide
 from repro.core.kvstore import KVStore
 
 

@@ -7,8 +7,9 @@ import pytest
 from repro.configs import get_arch
 from repro.core import costmodel, waf
 from repro.core.costmodel import A800, TPU_V5E, TaskModel
-from repro.core.planner import (PlanInput, PlanTable, _maxplus, brute_force,
-                                solve, solve_reference)
+from repro.core.planner import (PlanInput, PlannerCache, PlanTable,
+                                _maxplus, brute_force, solve,
+                                solve_reference)
 from repro.core.waf import Task
 
 SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
@@ -151,10 +152,12 @@ def test_solve_equals_reference_on_random_tables():
         n = rng.randint(0, 12)
         rows = rng.uniform(0, 100, (m, n + 1))
         inp = _inp([_Row(r) for r in rows], [0] * m, n)
+        def table_row(i_, idx, hw):
+            return list(rows[idx])
+
         orig = planner_mod._reward_row
         try:
-            planner_mod._reward_row = \
-                lambda i_, idx, hw: list(rows[idx])     # noqa: E731
+            planner_mod._reward_row = table_row
             got = solve(inp, A800)
             want = solve_reference(inp, A800)
         finally:
@@ -203,3 +206,71 @@ def test_incremental_table_dispatch_is_constant_time():
     assert table.lookup("join:1") is not None
     assert table.lookup("finish:3") is not None
     assert table.lookup("nonsense") is None
+
+
+def test_solve_fast_identical_to_solve():
+    """The cached engine's fresh-dispatch solver is the same function as
+    ``solve`` — identical assignments AND rewards, bit for bit."""
+    from repro.core.planner import solve_fast
+    for m, n in [(1, 8), (4, 48), (8, 96)]:
+        tasks = _tasks(m)
+        for fi in (None, 0, m - 1):
+            faulted = tuple(i == fi for i in range(m))
+            inp = _inp(tasks, [n // m] * m, n, faulted=faulted)
+            a, b = solve(inp, A800), solve_fast(inp, A800)
+            assert a.assignment == b.assignment
+            assert a.total_reward == b.total_reward
+
+
+# ---- (d) lazy / cross-rebuild-cached PlanTable ----------------------------
+
+
+def test_lazy_cached_table_identical_to_eager():
+    """Every scenario assembled lazily through a shared PlannerCache is
+    bit-identical (assignment AND reward) to the eager uncached build."""
+    tasks = _tasks(6)
+    cache = PlannerCache()
+    assignment = [16, 16, 16, 24, 24, 32]
+    for budget in (None, 160):
+        eager = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                          n_budget=budget)
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           n_budget=budget)
+        assert not lazy.table                 # nothing assembled yet
+        for key in eager.table:
+            a, b = eager.table[key], lazy.lookup(key)
+            assert a.assignment == b.assignment, key
+            assert a.total_reward == b.total_reward, key
+    # recurring state: the cache returns the same (now warm) table object
+    again = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                        n_budget=160)
+    assert again.lookup("fault:0") is lazy.lookup("fault:0")
+    assert cache.stats()["hits"]["tables"] >= 1
+
+
+def test_cached_table_matches_reference_under_random_churn():
+    """Deterministic churn walk: one task's assignment changes per step
+    (the cross-rebuild chain-reuse case), and every scenario of every
+    intermediate state must match the all-scalar reference table."""
+    import random
+
+    rng = random.Random(0)
+    m, n_budget = 3, 28
+    tasks = _tasks(m)
+    cache = PlannerCache()
+    assignment = [8, 8, 8]
+    for step in range(6):
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           workers_per_fault=4, n_budget=n_budget)
+        ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                        workers_per_fault=4, incremental=False,
+                        solver=solve_reference)
+        for key in ref.table:
+            got = lazy.lookup(key)
+            want = ref.table[key]
+            assert got.total_reward == pytest.approx(
+                want.total_reward, rel=1e-9), (step, key, assignment)
+        i = rng.randrange(m)
+        assignment[i] = rng.choice([4, 8, 12, 16])
+    stats = cache.stats()
+    assert stats["hits"]["arrays"] > 0        # chains were reused

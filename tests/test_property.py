@@ -10,11 +10,9 @@ import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.planner import (Plan, PlanInput, brute_force, solve,
-                                solve_reference)
+from repro.core.planner import PlanInput, brute_force, solve, solve_reference
 from repro.core.resumption import MicroBatchIteration
 from repro.core.costmodel import Hardware
-from repro.core.waf import Task, waf
 from repro.data.pipeline import SyntheticLM, microbatches, stack_microbatches
 from repro.launch.hlo_analysis import shape_bytes, shape_elems
 
@@ -61,6 +59,33 @@ def _reward_tables(tasks, assignment, n, d_run, d_tr, faulted):
     finally:
         waf_mod.waf = orig
     return got, scalar, want
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data(), m=st.integers(min_value=1, max_value=3))
+def test_cached_plan_table_matches_reference_under_churn(data, m):
+    """Cross-rebuild-cached lazy PlanTable == scalar-reference rewards for
+    every scenario of every state along a random churn sequence (ISSUE 2:
+    the chain cache must never serve a stale prefix/suffix DP)."""
+    from benchmarks.common import fleet_tasks
+    from repro.core.costmodel import A800
+    from repro.core.planner import PlannerCache, PlanTable
+
+    tasks = fleet_tasks(m)
+    cache = PlannerCache()
+    assignment = [data.draw(st.sampled_from([4, 8, 12])) for _ in range(m)]
+    for _ in range(data.draw(st.integers(min_value=1, max_value=4))):
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           workers_per_fault=4, n_budget=40)
+        ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                        workers_per_fault=4, incremental=False,
+                        solver=solve_reference)
+        for key in ref.table:
+            got = lazy.lookup(key)
+            assert abs(got.total_reward - ref.table[key].total_reward) \
+                <= 1e-9 * max(1.0, abs(ref.table[key].total_reward)), key
+        i = data.draw(st.integers(min_value=0, max_value=m - 1))
+        assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
 
 
 @settings(max_examples=40, deadline=None)

@@ -1,0 +1,169 @@
+"""Scenario library (core.scenarios) + cluster-scale engine invariants:
+seeded determinism, correlated failures respecting switch domains, the
+§4.1 degradation margin, and vectorized-vs-scalar WAF equivalence."""
+import pytest
+
+from benchmarks.common import case5_tasks
+from repro.core import scenarios as sc
+from repro.core.detection import DEGRADE_MARGIN, OnlineStatMonitor
+from repro.core.planner import PlannerCache
+from repro.core.simulator import (EFFICIENCY, TraceSimulator,
+                                  VectorSimulator, run_monte_carlo)
+from repro.core.traces import DAY
+
+N_NODES = 16
+SPAN = 7 * DAY
+
+
+def _sig(scenario):
+    fails = [(e.time, e.node, e.kind, e.repair_s)
+             for e in scenario.failures]
+    degr = [(d.time, d.node, d.slowdown, d.duration_s)
+            for d in scenario.degradations]
+    churn = [(c.time, type(c).__name__) for c in scenario.churn]
+    return (fails, degr, churn)
+
+
+def test_identical_seeds_identical_traces():
+    tasks, _ = case5_tasks()
+    for maker in (
+        lambda seed: sc.independent_failures(
+            n_nodes=N_NODES, span_s=SPAN, seed=seed),
+        lambda seed: sc.correlated_failures(
+            n_nodes=N_NODES, span_s=SPAN, seed=seed),
+        lambda seed: sc.slow_nodes(n_nodes=N_NODES, span_s=SPAN, seed=seed),
+        lambda seed: sc.preemption_waves(
+            n_nodes=N_NODES, span_s=SPAN, seed=seed),
+        lambda seed: sc.mixed_fleet(
+            n_nodes=N_NODES, span_s=SPAN, seed=seed, m_initial=6,
+            candidates=tasks[:2]),
+    ):
+        assert _sig(maker(7)) == _sig(maker(7))
+        assert _sig(maker(7)) != _sig(maker(8))
+
+
+def test_correlated_failures_respect_group_boundaries():
+    one = sc.correlated_failures(n_nodes=N_NODES, span_s=SPAN, seed=3,
+                                 group_size=4, n_bursts=1,
+                                 hit_fraction=1.0)
+    assert one.failures, "burst produced no failures"
+    groups = {one.groups.group_of(e.node) for e in one.failures}
+    assert len(groups) == 1
+    # multi-burst: cluster events by time gaps; each burst stays in-domain
+    many = sc.correlated_failures(n_nodes=N_NODES, span_s=SPAN, seed=5,
+                                  group_size=4, n_bursts=4,
+                                  burst_span_s=60.0, hit_fraction=1.0)
+    bursts, current, last_t = [], [], None
+    for e in many.failures:
+        if last_t is not None and e.time - last_t > 120.0:
+            bursts.append(current)
+            current = []
+        current.append(e)
+        last_t = e.time
+    bursts.append(current)
+    for burst in bursts:
+        assert len({many.groups.group_of(e.node) for e in burst}) == 1
+    # all burst members are SEV1 node losses with a repair
+    assert all(e.repair_s is not None for e in many.failures)
+
+
+def test_degradations_trip_statistical_monitor_margin():
+    scen = sc.slow_nodes(n_nodes=N_NODES, span_s=SPAN, seed=11, n_events=16)
+    assert len(scen.degradations) == 16
+    for ev in scen.degradations:
+        assert ev.slowdown >= DEGRADE_MARGIN
+        mon = OnlineStatMonitor.primed(30.0)
+        assert mon.status(ev.slowdown * 30.0) != "ok"
+    # sub-margin slowdowns do NOT trip the monitor
+    mon = OnlineStatMonitor.primed(30.0)
+    assert mon.status(1.05 * 30.0) == "ok"
+
+
+def test_preemption_wave_shape():
+    scen = sc.preemption_waves(n_nodes=N_NODES, span_s=SPAN, seed=2,
+                               n_waves=2, wave_fraction=0.25)
+    assert len(scen.failures) == 2 * 4       # 25% of 16 nodes per wave
+    assert all(e.repair_s is not None for e in scen.failures)
+
+
+def test_task_churn_valid_slots():
+    tasks, _ = case5_tasks()
+    scen = sc.task_churn(span_s=SPAN, seed=4, n_nodes=N_NODES, m_initial=6,
+                         candidates=tasks[:3], n_arrivals=2, n_finishes=3)
+    finishes = [c for c in scen.churn if isinstance(c, sc.TaskFinish)]
+    arrivals = [c for c in scen.churn if isinstance(c, sc.TaskArrival)]
+    assert len(finishes) == 3 and len(arrivals) == 2
+    slots = [f.slot for f in finishes]
+    assert len(set(slots)) == len(slots)
+    assert all(0 <= s < 6 for s in slots)
+    assert all(a.task in tasks[:3] for a in arrivals)
+
+
+def test_unicron_drains_slow_nodes_baselines_crawl():
+    """§4.1: the statistical monitor turns a slow node into a drain +
+    replan; without in-band detection the task crawls at the slow pace."""
+    tasks, assignment = case5_tasks()
+    scen = sc.slow_nodes(n_nodes=N_NODES, span_s=SPAN, seed=11, n_events=6)
+    uni = TraceSimulator(tasks, list(assignment), "unicron").run(scen)
+    blind = TraceSimulator(tasks, list(assignment), "unicron",
+                           ablate_detection=True).run(scen)
+    assert uni.n_degraded_drains > 0
+    assert blind.n_degraded_drains == 0
+    assert uni.accumulated_waf > blind.accumulated_waf
+
+
+def test_churn_flows_through_planner():
+    tasks, assignment = case5_tasks()
+    scen = sc.task_churn(span_s=SPAN, seed=4, n_nodes=N_NODES, m_initial=6,
+                         candidates=tasks[:2], n_arrivals=2, n_finishes=2)
+    sim = TraceSimulator(tasks, list(assignment), "unicron")
+    res = sim.run(scen)
+    assert res.n_reconfigs >= 4              # 2 finishes + 2 launches
+    finished_slots = [c.slot for c in scen.churn
+                      if isinstance(c, sc.TaskFinish)]
+    for slot in finished_slots:
+        assert not sim.tasks[slot].active
+        assert sim.tasks[slot].workers == 0
+    assert len(sim.tasks) == 6 + 2           # arrivals appended
+    assert sum(t.workers for t in sim.tasks) <= N_NODES * 8
+    assert sim.coord.plan_stats.task_finishes == 2
+    assert sim.coord.plan_stats.task_launches == 2
+
+
+@pytest.mark.parametrize("policy", list(EFFICIENCY))
+def test_vector_engine_matches_scalar_reference(policy):
+    """Accumulated WAF of VectorSimulator (lazy cached planner + numpy
+    segment integration) matches the per-event scalar loop to float
+    reordering on the full mixed scenario."""
+    tasks, assignment = case5_tasks()
+    scen = sc.mixed_fleet(n_nodes=N_NODES, span_s=SPAN, seed=5,
+                          m_initial=len(tasks), candidates=tasks[:2],
+                          mtbf_node_s=20 * DAY, n_degradations=4)
+    ref = TraceSimulator(tasks, list(assignment), policy).run(scen)
+    got = VectorSimulator(tasks, list(assignment), policy).run(scen)
+    assert got.accumulated_waf == pytest.approx(ref.accumulated_waf,
+                                                rel=1e-9)
+    assert got.n_reconfigs == ref.n_reconfigs
+    assert got.n_degraded_drains == ref.n_degraded_drains
+
+
+def test_monte_carlo_shares_plan_cache():
+    tasks, assignment = case5_tasks()
+    cache = PlannerCache()
+
+    def make(seed):
+        return sc.independent_failures(n_nodes=N_NODES, span_s=SPAN,
+                                       seed=seed, mtbf_node_s=30 * DAY)
+
+    out = run_monte_carlo(tasks, assignment, make, seeds=range(3),
+                          policies=["unicron", "megatron"],
+                          n_nodes=N_NODES, plan_cache=cache)
+    assert set(out) == {"unicron", "megatron"}
+    assert len(out["unicron"].per_seed) == 3
+    stats = cache.stats()
+    assert stats["hits"]["tables"] > 0       # cross-seed state reuse
+    # per-seed results equal a fresh single run (cache must not leak state)
+    solo = VectorSimulator(tasks, list(assignment), "unicron",
+                           n_nodes=N_NODES).run(make(1))
+    assert solo.accumulated_waf == pytest.approx(
+        out["unicron"].per_seed[1], rel=1e-12)

@@ -2,8 +2,8 @@
 import pytest
 
 from benchmarks.common import case5_tasks
-from repro.core.simulator import EFFICIENCY, TraceSimulator, run_policies
-from repro.core.traces import (FailureEvent, trace_a, trace_b, trace_span)
+from repro.core.simulator import TraceSimulator, run_policies
+from repro.core.traces import FailureEvent, trace_a, trace_b, trace_span
 from repro.core.detection import ErrorKind
 
 
@@ -68,6 +68,21 @@ def test_megatron_hot_spare_preserves_capacity():
     # spare consumed, workers unchanged
     assert sim.spares == 0
     assert sum(t.workers for t in sim.tasks) == sum(assignment)
+
+
+def test_vector_simulator_matches_reference_on_traces():
+    """Pure failure traces (the original Fig. 11 inputs) through the
+    vectorized engine reproduce the scalar loop's WAF integral."""
+    from repro.core.simulator import VectorSimulator
+    tasks, assignment = case5_tasks()
+    trace = trace_b()
+    for policy in ("unicron", "megatron", "bamboo"):
+        ref = TraceSimulator(tasks, list(assignment), policy).run(trace)
+        got = VectorSimulator(tasks, list(assignment), policy).run(trace)
+        assert got.accumulated_waf == pytest.approx(ref.accumulated_waf,
+                                                    rel=1e-9), policy
+        assert got.n_reconfigs == ref.n_reconfigs
+        assert got.downtime_s == pytest.approx(ref.downtime_s)
 
 
 def test_ablation_ordering_and_consistency():

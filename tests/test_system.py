@@ -3,7 +3,6 @@ consistency, fused vs resumable path equivalence, coordinator flow."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.core.coordinator import UnicronCoordinator
@@ -14,10 +13,9 @@ from repro.core.waf import Task
 from repro.data.pipeline import SyntheticLM, stack_microbatches
 from repro.models.model import build_model
 from repro.optim import AdamW, constant
-from repro.serve.decode import generate, make_serve_step, prefill
+from repro.serve.decode import generate
 from repro.train.state import init_train_state
-from repro.train.step import (accumulate, finalize_step, make_grad_fn,
-                              make_train_step)
+from repro.train.step import (accumulate, finalize_step, make_grad_fn, make_train_step)
 
 
 def test_training_loss_decreases():
