@@ -1,0 +1,108 @@
+"""Max-plus convolution kernel microbenchmark (the planner's DP floor).
+
+Per-convolution latency at n in {256, 1024, 4096} for the four kernels:
+
+  * numpy   — ``_maxplus_vals`` (plain windowed matrix, PR-1 baseline);
+  * fused   — ``_maxplus_vals_fused`` dense (tiled add+max, no (n x n)
+              candidate matrix);
+  * banded  — ``_maxplus_vals_fused`` at band = cap (cap = n/8, the
+              ``Task.max_workers`` regime);
+  * pallas  — ``kernels.maxplus.maxplus_conv`` in interpret mode (f32;
+              the compiled Mosaic path needs a TPU).
+
+Hard asserts (the harness fails loudly on a regression):
+
+  * fused and banded outputs are bitwise identical to ``_maxplus_vals``
+    on their candidate sets; pallas matches the f32 oracle to 1e-6;
+  * at n >= 1024 and cap = n/8 the banded kernel is >= 5x faster than
+    the dense convolution the engines previously always ran
+    (``_maxplus_vals``) — the acceptance floor.  ``banded_vs_fused``
+    (banded against the *new* dense fused kernel) is also emitted; it
+    sits near the 8x candidate-count ratio minus memory-system effects.
+
+``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grid to
+{256, 1024} for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.planner import _maxplus_vals, _maxplus_vals_fused
+
+GRID_N = [256, 1024, 4096]
+CAP_DIV = 8                    # banded regime: cap = n / 8
+BANDED_FLOOR = 5.0             # banded >= 5x dense at cap <= n/8, n >= 1024
+PALLAS_TOL = 1e-6
+
+
+def _data(n: int, cap: int):
+    """Monotone DP vector + reward row flat past the cap (the band
+    contract the planner guarantees)."""
+    rng = np.random.RandomState(n)
+    prev = np.maximum.accumulate(rng.uniform(0.0, 100.0, n + 1))
+    g = rng.uniform(0.0, 100.0, n + 1)
+    g[cap:] = g[cap]
+    return prev, g
+
+
+def run() -> list:
+    quick = os.environ.get("REPRO_BENCH_QUICK") == "1"
+    grid = [256, 1024] if quick else GRID_N
+    iters = 3 if quick else 7
+    rows = []
+    checked_floor = False
+    for n in grid:
+        cap = n // CAP_DIV
+        prev, g = _data(n, cap)
+
+        want = _maxplus_vals(prev, g)
+        assert np.array_equal(want, _maxplus_vals_fused(prev, g)), n
+        assert np.array_equal(want,
+                              _maxplus_vals_fused(prev, g, band=cap)), n
+
+        numpy_s = timeit(_maxplus_vals, prev, g, iters=iters)
+        fused_s = timeit(_maxplus_vals_fused, prev, g, iters=iters)
+        banded_s = timeit(lambda: _maxplus_vals_fused(prev, g, band=cap),
+                          iters=iters)
+
+        from repro.kernels.maxplus import maxplus_conv, maxplus_conv_np
+        got = np.asarray(maxplus_conv(prev, g, band=cap, interpret=True))
+        oracle = maxplus_conv_np(prev, g, band=cap)
+        rel = np.max(np.abs(got - oracle) / np.maximum(np.abs(oracle), 1.0))
+        assert rel < PALLAS_TOL, (n, rel)
+        pallas_s = timeit(
+            lambda: np.asarray(
+                maxplus_conv(prev, g, band=cap, interpret=True)),
+            iters=iters)
+
+        fused_speedup = numpy_s / fused_s
+        banded_speedup = numpy_s / banded_s
+        banded_vs_fused = fused_s / banded_s
+        if n >= 1024:
+            checked_floor = True
+            assert banded_speedup >= BANDED_FLOOR, (
+                f"banded max-plus speedup {banded_speedup:.1f}x at "
+                f"(n={n}, cap={cap}) below the {BANDED_FLOOR:.0f}x floor")
+            print(f"[floor check] banded speedup at (n={n}, cap={cap}): "
+                  f"{banded_speedup:.1f}x vs dense numpy "
+                  f"(floor {BANDED_FLOOR:.0f}x; vs fused "
+                  f"{banded_vs_fused:.1f}x)")
+        rows.append({
+            "workers": n, "cap": cap,
+            "numpy_ms": numpy_s * 1e3,
+            "fused_ms": fused_s * 1e3,
+            "banded_ms": banded_s * 1e3,
+            "pallas_interp_ms": pallas_s * 1e3,
+            "fused_speedup": fused_speedup,
+            "banded_speedup": banded_speedup,
+            "banded_vs_fused": banded_vs_fused,
+        })
+    assert checked_floor, "grid never hit the n >= 1024 banded floor check"
+    emit(rows, "maxplus",
+         ["workers", "cap", "numpy_ms", "fused_ms", "banded_ms",
+          "pallas_interp_ms", "fused_speedup", "banded_speedup",
+          "banded_vs_fused"])
+    return rows

@@ -4,16 +4,26 @@ Measures, over (workers, tasks) in {64..1024} x {4..32}:
 
   * ``solve``            — vectorized max-plus DP latency, vs the retained
                            scalar ``solve_reference`` where tractable;
-  * ``PlanTable`` rebuild — incremental build (shared reward rows +
-                           prefix/suffix DPs) vs the scalar
-                           scenario-by-scenario reference where tractable;
+  * ``PlanTable`` rebuild — incremental build (segment-tree engine) vs the
+                           scalar scenario-by-scenario reference where
+                           tractable;
   * dispatch             — ``table.lookup`` latency (the O(1) failure-time
-                           path).
+                           path);
+  * churn rebuild        — a seeded churn walk (one assignment change +
+                           two scenario lookups per step) through a shared
+                           ``PlannerCache``, segment-tree engine vs the
+                           PR-2 chain engine, on a cap-aware fleet at
+                           (n=1024, m=64).
 
-Wherever the reference runs, total rewards must match to 1e-6 on every
-solve and every table scenario; at (n=256, m=16) the incremental rebuild
-must be >= 50x faster than the scalar reference — both are hard-asserted,
-so the harness fails loudly on a regression.
+Hard asserts, so the harness fails loudly on a regression:
+
+  * wherever the scalar reference runs, total rewards match to 1e-6 on
+    every solve and every table scenario;
+  * at (n=256, m=16) the incremental rebuild is >= 50x faster than the
+    scalar reference;
+  * the segment-tree churn walk is >= 3x faster than the chain engine at
+    (n=1024, m=64), with identical-to-1e-6 rewards between the engines
+    there and against ``solve_reference`` on the small verification walk.
 
 ``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grid for CI
 smoke runs.
@@ -21,11 +31,13 @@ smoke runs.
 from __future__ import annotations
 
 import os
+import random
 import time
 
 from benchmarks.common import emit, fleet_tasks, timeit
 from repro.core.costmodel import A800
-from repro.core.planner import PlanInput, PlanTable, solve, solve_reference
+from repro.core.planner import (PlanInput, PlannerCache, PlanTable, solve,
+                                solve_reference)
 
 GRID_N = [64, 128, 256, 512, 1024]
 GRID_M = [4, 8, 16, 32]
@@ -33,6 +45,9 @@ GRID_M = [4, 8, 16, 32]
 # finishes in seconds, and extrapolate nothing beyond what was measured
 REF_LIMIT = (256, 16)
 SPEEDUP_FLOOR = 50.0      # hard floor at (n, m) == REF_LIMIT
+CHURN_N, CHURN_M = 1024, 64
+CHURN_STEPS = 12
+CHURN_FLOOR = 3.0         # segtree churn walk vs chain engine
 REL_TOL = 1e-6
 
 _tasks = fleet_tasks
@@ -40,6 +55,55 @@ _tasks = fleet_tasks
 
 def _rel_err(a: float, b: float) -> float:
     return abs(a - b) / max(1.0, abs(b))
+
+
+def _churn_walk(tasks, assignment0, n, engine, steps, seed=0,
+                changes_per_step=3):
+    """Seeded churn workload: per step, look up one fault and one finish
+    scenario from the cached lazy table of the current state, then apply
+    one reconfiguration-sized change (a plan rarely moves a single task —
+    ``changes_per_step`` assignments shift at once).  Identical seeds give
+    identical key/assignment sequences across engines, so the reward
+    streams must agree."""
+    cache = PlannerCache()
+    assignment = list(assignment0)
+    rng = random.Random(seed)
+    m = len(tasks)
+    rewards = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        table = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                            n_budget=n + 8, engine=engine)
+        for key in (f"fault:{rng.randrange(m)}",
+                    f"finish:{rng.randrange(m)}"):
+            rewards.append((key, tuple(assignment),
+                            table.lookup(key).total_reward))
+        for _ in range(changes_per_step):
+            assignment[rng.randrange(m)] = rng.choice((8, 12, 16, 20, 24))
+    return time.perf_counter() - t0, rewards
+
+
+def _churn_reference_check(n: int, m: int, steps: int) -> None:
+    """Small walk where the scalar reference is tractable: every looked-up
+    segment-tree scenario must match ``solve_reference`` to 1e-6."""
+    tasks = _tasks(m, max_workers=max(n // 8, 8))
+    _, rewards = _churn_walk(tasks, [n // m] * m, n, "segtree", steps)
+    for key, assignment, got in rewards:
+        kind, _, idx = key.partition(":")
+        ti = int(idx)
+        n_now = sum(assignment)
+        if kind == "fault":
+            inp = PlanInput(tuple(tasks), assignment, max(n_now - 8, 0),
+                            3600.0, 120.0,
+                            tuple(i == ti for i in range(m)))
+        else:
+            rem_t = tuple(tasks[:ti] + tasks[ti + 1:])
+            rem_a = assignment[:ti] + assignment[ti + 1:]
+            inp = PlanInput(rem_t, rem_a, n_now, 3600.0, 120.0,
+                            (False,) * (m - 1))
+        want = solve_reference(inp, A800)
+        assert _rel_err(got, want.total_reward) < REL_TOL, (
+            key, assignment, got, want.total_reward)
 
 
 def run() -> list:
@@ -106,8 +170,42 @@ def run() -> list:
             rows.append(row)
     if not quick:
         assert checked_floor, "grid never hit the (256, 16) floor check"
+
+    # ---- churn-rebuild walk: segment tree vs the PR-2 chain engine --------
+    # Cap-aware fleet: every task capped at twice its fair share (DP-width
+    # limits at fleet scale), which is what lets the tree's leaf-ward
+    # convolutions run banded while the chain baseline stays dense.
+    _churn_reference_check(n=96, m=8, steps=2 if quick else 4)
+    n, m = CHURN_N, CHURN_M
+    tasks = _tasks(m, max_workers=2 * (n // m))
+    assignment0 = [n // m] * m
+    # warm the memoized cost-model sweeps so neither engine pays them
+    _churn_walk(tasks, assignment0, n, "segtree", 1, seed=99)
+    seg_s, seg_rewards = _churn_walk(tasks, assignment0, n, "segtree",
+                                     CHURN_STEPS)
+    chain_s, chain_rewards = _churn_walk(tasks, assignment0, n, "chain",
+                                         CHURN_STEPS)
+    for (key, asg, a), (_, _, b) in zip(seg_rewards, chain_rewards):
+        assert _rel_err(a, b) < REL_TOL, (key, asg, a, b)
+    churn_speedup = chain_s / seg_s
+    assert churn_speedup >= CHURN_FLOOR, (
+        f"segment-tree churn walk {churn_speedup:.1f}x at (n={n}, m={m}) "
+        f"below the {CHURN_FLOOR:.0f}x floor vs the chain engine")
+    print(f"[floor check] churn-rebuild speedup at (n={n}, m={m}, "
+          f"{CHURN_STEPS} steps): {churn_speedup:.1f}x "
+          f"(floor {CHURN_FLOOR:.0f}x)")
+    rows.append({"workers": n, "tasks": m,
+                 "solve_ms": "", "solve_ref_ms": "", "solve_speedup": "",
+                 "rebuild_ms": "", "rebuild_ref_ms": "",
+                 "rebuild_speedup": "", "dispatch_us": "",
+                 "reward_match": len(seg_rewards),
+                 "churn_segtree_ms": seg_s * 1e3,
+                 "churn_chain_ms": chain_s * 1e3,
+                 "churn_speedup": churn_speedup})
+
     emit(rows, "planner_scale",
          ["workers", "tasks", "solve_ms", "solve_ref_ms", "solve_speedup",
           "rebuild_ms", "rebuild_ref_ms", "rebuild_speedup", "dispatch_us",
-          "reward_match"])
+          "reward_match", "churn_segtree_ms", "churn_chain_ms",
+          "churn_speedup"])
     return rows

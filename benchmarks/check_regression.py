@@ -35,9 +35,15 @@ EQ_TOL = 1e-6
 SPECS = {
     "planner_scale": {
         "keys": ("workers", "tasks"),
-        "higher": ("solve_speedup", "rebuild_speedup"),
+        "higher": ("solve_speedup", "rebuild_speedup", "churn_speedup"),
         # sub-ms small-n measurements are too noisy for a ratio gate
         "min_workers": 256,
+    },
+    "maxplus": {
+        "keys": ("workers", "cap"),
+        "higher": ("fused_speedup", "banded_speedup"),
+        # sub-ms small-n measurements are too noisy for a ratio gate
+        "min_workers": 1024,
     },
     "cluster_sim": {
         "keys": ("config", "policy"),

@@ -55,13 +55,18 @@ def case5_tasks():
 FLEET_SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
 
 
-def fleet_tasks(m: int):
+def fleet_tasks(m: int, max_workers=None):
     """m heterogeneous tasks cycling the GPT-3 family with varied weights
-    and batch sizes — the multi-task fleet of the scale benchmarks."""
+    and batch sizes — the multi-task fleet shared by all cluster benches.
+
+    ``max_workers``: per-task worker cap (``Task.max_workers``) applied to
+    every task — the cap-aware fleets the banded planner kernels exploit.
+    ``None`` keeps the historical uncapped fleet."""
     from repro.configs import get_arch
     from repro.core.costmodel import TaskModel
     from repro.core.waf import Task
     return [Task(model=TaskModel.from_arch(
                      get_arch(FLEET_SIZES[i % len(FLEET_SIZES)]),
                      global_batch=128 if i % 2 else 256),
-                 weight=0.5 + 0.1 * (i % 16)) for i in range(m)]
+                 weight=0.5 + 0.1 * (i % 16),
+                 max_workers=max_workers) for i in range(m)]

@@ -20,11 +20,11 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-BENCHES = ["detection", "costmodel", "planner_scale", "cluster_sim",
-           "transition", "throughput", "waf_multitask", "traces",
-           "ablation", "roofline"]
-QUICK_BENCHES = ["detection", "costmodel", "planner_scale", "cluster_sim",
-                 "transition"]
+BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
+           "cluster_sim", "transition", "throughput", "waf_multitask",
+           "traces", "ablation", "roofline"]
+QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
+                 "cluster_sim", "transition"]
 
 
 def main() -> None:

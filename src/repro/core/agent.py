@@ -15,7 +15,7 @@ from typing import Dict, Optional
 
 from repro.core.detection import (ErrorKind, OnlineStatMonitor, classify,
                                   detection_time)
-from repro.core.kvstore import KVStore
+from repro.core.kvstore import KVStore, PLAN_EPOCH_KEY
 
 HEARTBEAT_INTERVAL_S = 2.0
 HEARTBEAT_TTL_S = 6.0
@@ -66,6 +66,30 @@ class UnicronAgent:
                   "severity": int(sev), "method": method.value,
                   "raised_at": now, "visible_at": now + latency}
         self.kv.put(f"/errors/{self.node_id}/{now:.3f}", record, now=now)
+        return record
+
+    # ---- task churn reports (Figure 7 trigger 5) -------------------------
+
+    def report_task_finished(self, task_index: int, now: float,
+                             epoch: int) -> Dict:
+        """Announce through the status monitor that the coordinator task
+        this node participates in has completed (Figure 7 trigger 5).
+        Completion is in-band and immediate — no detection latency — and
+        every worker of the task may report; the control loop deduplicates
+        per task per tick before firing ``task_finished``.
+
+        ``epoch`` MUST be the plan epoch under which the agent learned
+        ``task_index`` — index and epoch travel together in a plan
+        dispatch (``PLAN_EPOCH_KEY`` at dispatch time), and pairing a
+        dispatch-time index with a fresher epoch would defeat the
+        staleness guard.  Task indices are positional, so the control
+        loop drops any report whose epoch predates a task-set change
+        instead of resolving it against shifted indices."""
+        record = {"node": self.node_id, "task": int(task_index),
+                  "epoch": int(epoch), "finished_at": now,
+                  "visible_at": now}
+        self.kv.put(f"/tasks/finished/{now:.3f}/{self.node_id}", record,
+                    now=now)
         return record
 
     # ---- iteration statistics (online statistical monitoring) -----------

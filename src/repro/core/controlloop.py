@@ -26,6 +26,7 @@ from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
 from repro.core.detection import ErrorKind
 from repro.core.handling import Action, Trigger
+from repro.core.kvstore import PLAN_EPOCH_KEY
 
 
 @dataclass
@@ -56,6 +57,7 @@ class ControlLoop:
         out: List[LoopEvent] = []
         out += self._expire_heartbeats(now)
         out += self._drain_error_reports(now)
+        out += self._drain_task_reports(now)
         out += self._rejoin_repaired(now)
         self.events += out
         return out
@@ -77,6 +79,32 @@ class ControlLoop:
             self._seen.add(key)
             out.append(self._handle(now, rec["node"],
                                     ErrorKind(rec["kind"])))
+        return out
+
+    def _drain_task_reports(self, now: float) -> List[LoopEvent]:
+        """Agent-announced task completions (``/tasks/finished/`` keys):
+        deduplicate per coordinator task index — every worker of a task
+        may report — and fire the ``task_finished`` trigger, highest
+        index first so the remaining indices stay valid as entries pop.
+
+        Reports are positional, so only those stamped with the current
+        plan epoch are honored: once any finish/launch shifts the task
+        set, still-queued reports refer to indices that no longer name
+        the same task and are consumed without firing (their workers
+        re-report against the new epoch if the task is genuinely done)."""
+        epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
+        done = set()
+        for key, rec in sorted(self.kv.prefix("/tasks/finished/").items()):
+            if key in self._seen or rec["visible_at"] > now:
+                continue
+            self._seen.add(key)
+            if rec.get("epoch", epoch) != epoch:
+                continue                       # stale: indices have shifted
+            done.add(int(rec["task"]))
+        out = []
+        for idx in sorted(done, reverse=True):
+            if 0 <= idx < len(self.coord.entries):
+                out.append(self._task_finished_event(now, idx))
         return out
 
     def _rejoin_repaired(self, now: float) -> List[LoopEvent]:
@@ -118,14 +146,19 @@ class ControlLoop:
 
     # ---- task churn entry points (Figure 7 triggers 5 and 6) --------------
 
-    def task_finished(self, now: float, task_index: int) -> LoopEvent:
-        """A task completed: free its workers and replan the remainder."""
+    def _task_finished_event(self, now: float, task_index: int) -> LoopEvent:
         plan = self.coord.task_finished(task_index,
                                         self.cluster.healthy_workers())
         self.cluster.assign(list(plan.assignment))
-        ev = LoopEvent(now, -1, None, Action.RESUME,
-                       plan.assignment,
-                       self.coord.plan_stats.last_dispatch_s)
+        return LoopEvent(now, -1, None, Action.RESUME,
+                         plan.assignment,
+                         self.coord.plan_stats.last_dispatch_s)
+
+    def task_finished(self, now: float, task_index: int) -> LoopEvent:
+        """A task completed: free its workers and replan the remainder.
+        Direct entry point; agent-announced completions arrive through
+        the KV store instead (``_drain_task_reports`` in ``tick``)."""
+        ev = self._task_finished_event(now, task_index)
         self.events.append(ev)
         return ev
 

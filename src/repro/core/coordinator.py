@@ -15,7 +15,7 @@ from repro.core import planner, waf as waf_mod
 from repro.core.costmodel import Hardware
 from repro.core.detection import ErrorKind
 from repro.core.handling import FailureCase, HandlingDecision, Trigger, decide
-from repro.core.kvstore import KVStore
+from repro.core.kvstore import KVStore, PLAN_EPOCH_KEY
 from repro.core.planner import Plan, PlanInput, PlanTable
 from repro.core.waf import Task
 
@@ -53,7 +53,8 @@ class UnicronCoordinator:
                  d_transition_s: float = 120.0,
                  plan_cache: Optional[planner.PlannerCache] = None,
                  n_cluster_workers: Optional[int] = None,
-                 workers_per_node: int = 8):
+                 workers_per_node: int = 8,
+                 plan_engine: str = "segtree"):
         """``plan_cache``: share a ``PlannerCache`` across coordinators —
         plan tables become lazy (scenarios assembled on first lookup) and
         rows/prefix-suffix DPs/solves are reused across rebuilds, with
@@ -64,8 +65,14 @@ class UnicronCoordinator:
         WHOLE cluster — failures arrive per node over the full fleet, not
         just the assigned workers — and the planner's DP arrays are sized
         once for that capacity, which keeps plan values comparable (and
-        cache keys identical) across rebuilds at different totals."""
+        cache keys identical) across rebuilds at different totals.
+
+        ``plan_engine``: incremental PlanTable engine — ``"segtree"``
+        (dyadic segment tree, O(log m) churn invalidation, banded
+        convolutions where tasks carry ``max_workers`` caps) or
+        ``"chain"`` (the PR-2 prefix/suffix chains)."""
         self.hw = hw
+        self.plan_engine = plan_engine
         self.kv = kv or KVStore()
         self.entries: List[TaskEntry] = [
             TaskEntry(task=t, n_workers=x,
@@ -79,7 +86,15 @@ class UnicronCoordinator:
         self._table: Optional[PlanTable] = None
         self.plan_cache = plan_cache
         self.plan_stats = PlanStats()
+        self.plan_epoch = 0
+        self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
         self.refresh_plan_table()
+
+    def _bump_epoch(self) -> None:
+        """The task set changed: indices in in-flight churn reports are
+        stale.  Publish the new epoch so agents stamp future reports."""
+        self.plan_epoch += 1
+        self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
 
     def _d_running(self, n_workers: int) -> float:
         return waf_mod.expected_run_duration(self.n_cluster or n_workers,
@@ -112,12 +127,14 @@ class UnicronCoordinator:
             self._table = self.plan_cache.table(tasks, assignment, self.hw,
                                                 d_run, self.d_transition,
                                                 workers_per_fault=w,
-                                                n_budget=n_budget)
+                                                n_budget=n_budget,
+                                                engine=self.plan_engine)
         else:
             self._table = PlanTable(tasks, assignment, self.hw, d_run,
                                     self.d_transition,
                                     workers_per_fault=w,
-                                    n_budget=n_budget)
+                                    n_budget=n_budget,
+                                    engine=self.plan_engine)
         dt = time.perf_counter() - t0
         self.plan_stats.table_rebuilds += 1
         self.plan_stats.table_rebuild_s += dt
@@ -207,6 +224,7 @@ class UnicronCoordinator:
                 plan = cand
                 self.plan_stats.lookup_hits += 1
         self.entries.pop(task_index)
+        self._bump_epoch()
         if plan is None:
             plan = self._fresh_plan(n_workers_now)
         for e, x in zip(self.entries, plan.assignment):
@@ -224,6 +242,7 @@ class UnicronCoordinator:
         self.entries.append(TaskEntry(task=task, n_workers=0,
                                       avg_iter_s=avg_iter_s,
                                       state_bytes=16.0 * task.model.n_params))
+        self._bump_epoch()
         t0 = time.perf_counter()
         plan = self._fresh_plan(n_workers_now)
         for e, x in zip(self.entries, plan.assignment):

@@ -302,16 +302,29 @@ _CURVE_CACHE_MAX = 1024                # curves are O(n) arrays; bound the set
 
 
 def throughput_curve(task: TaskModel, n: int,
-                     hw: Hardware = A800) -> ThroughputCurve:
+                     hw: Hardware = A800,
+                     cap: Optional[int] = None) -> ThroughputCurve:
     """T(t, ·) vector for worker counts 0..n plus argmax plans, memoized per
     (task, hw); a larger-n request grows the cached sweep, a smaller one
-    returns views into it."""
+    returns views into it.
+
+    ``cap``: per-task worker ceiling (``Task.max_workers``).  Past the cap
+    the curve is *flat* — extra workers idle, so T(t, x > cap) = T(t, cap)
+    and ``plan(x)`` returns the cap-worker plan.  The flat tail is what
+    lets the planner's banded max-plus kernels shrink the convolution
+    band from n to cap+1 without changing any optimum."""
     cached = _CURVE_CACHE.pop((task, hw), None)
     if cached is None or cached.n < n:
         cached = _sweep(task, max(n, 1), hw)
     while len(_CURVE_CACHE) >= _CURVE_CACHE_MAX:      # LRU: dicts keep
         _CURVE_CACHE.pop(next(iter(_CURVE_CACHE)))    # insertion order
     _CURVE_CACHE[(task, hw)] = cached
+    if cap is not None and cap < n:
+        idx = np.minimum(np.arange(n + 1), max(cap, 0))
+        return ThroughputCurve(task, hw, n, cached.flops[idx],
+                               cached.cfg[idx], cached.dp[idx],
+                               cached.t_iter[idx], cached.mem[idx],
+                               cached.configs)
     if cached.n == n:
         return cached
     s = slice(0, n + 1)

@@ -9,6 +9,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+# Well-known status-monitor keys shared by coordinator, control loop and
+# agents.  PLAN_EPOCH_KEY holds the coordinator's task-set epoch: bumped
+# whenever the entry list mutates (finish/launch), so positional task
+# indices in agent churn reports can be checked for freshness.
+PLAN_EPOCH_KEY = "/plan/epoch"
+
 
 @dataclass
 class _Entry:

@@ -13,24 +13,59 @@ Two solver paths share the recurrence:
 * ``solve_reference`` — the original pure-Python scalar DP, kept as the
   ground truth for property tests and the speedup baseline.
 
-``PlanTable`` precomputes the one-step lookahead lookup table the paper uses
-for O(1) dispatch at failure time.  The incremental build shares the m base
-reward rows across ALL fault/join/finish scenarios: prefix and suffix DPs
-over the base rows are computed once, and each scenario is then one or two
-max-plus combines instead of a full m-row solve — O(m) convolutions for the
-whole table instead of O(m^2).  With ``lazy=True`` the scenarios are
-assembled on first ``lookup`` instead of at build time, and with a
-``PlannerCache`` the reward rows and prefix/suffix DPs are reused *across*
-rebuilds: when only one task's assignment changed, only the chain past the
-change is recomputed, and a recurring cluster state is a whole-table hit.
-The churn-heavy cluster simulator (``core.simulator.VectorSimulator``) is
-the main consumer.
+Max-plus kernel family
+----------------------
+The DP inner loop is a max-plus (tropical) convolution; four evaluations
+share the candidate set (``prev[j-k] + g[k]``), so their maxima agree:
+
+* ``_maxplus_vals`` — plain windowed matrix (PR-1 baseline kernel);
+* ``_maxplus_vals_fast`` — row-blocked (PR-2 chain-engine kernel);
+* ``_maxplus_vals_fused`` — tiled fused add+max: candidate tiles are added
+  and max-reduced block-by-block so the (n x n) candidate matrix is never
+  materialized, and an optional **band** restricts the convolution to
+  ``k <= band``.  The band is sound whenever ``prev`` is monotone
+  non-decreasing (every DP value vector is) and ``g`` is flat past the
+  band (reward rows of tasks with ``Task.max_workers`` caps are; so are
+  span value vectors past the sum of their tasks' caps) — the banded
+  output is then bitwise-identical to the dense one.
+* ``kernels.maxplus.maxplus_conv`` — Pallas TPU kernel (interpret on
+  CPU/GPU, compiled via Mosaic on TPU), float32.  Selected with the
+  backend switch: ``set_maxplus_backend("pallas")`` or
+  ``REPRO_PLANNER_BACKEND=pallas``; default stays ``numpy`` (float64).
+
+Segment-tree incremental engine
+-------------------------------
+``PlanTable`` precomputes the one-step lookahead lookup table the paper
+uses for O(1) dispatch at failure time.  Two incremental engines build it:
+
+* ``engine="segtree"`` (default) — a dyadic segment tree over task
+  positions.  Each node stores the max-plus merge V[lo, hi) of its span's
+  reward rows (leaves are running maxima, internal nodes one banded
+  convolution of their children), and every scenario assembles from
+  O(log m) cached node merges: ``join`` reads the root, ``finish:i`` the
+  complement chain C(i) = merge of i's root-path siblings, ``fault:i``
+  one extra banded convolution of C(i) with the fault row.  A churn step
+  that changes one task's reward row therefore invalidates only the
+  O(log m) nodes on its root path (plus the complements crossing it)
+  instead of the O(m) prefix/suffix chain tail.
+* ``engine="chain"`` — the PR-2 prefix/suffix DP chains, kept unchanged
+  as the churn-rebuild speedup baseline (``bench_planner_scale``).
+
+With ``lazy=True`` scenarios (and the node merges feeding them) are
+assembled on first ``lookup``; with a ``PlannerCache`` reward rows and
+node/chain vectors are keyed by their span *contents* and reused across
+rebuilds, and a recurring cluster state is a whole-table hit.  The
+churn-heavy cluster simulator (``core.simulator.VectorSimulator``) is the
+main consumer.
 
 ``brute_force`` is an exponential reference used by the property tests.
+Regenerate the committed benchmark baselines (``results/bench_*.json``)
+with ``python benchmarks/run.py`` after any reward-model change here.
 """
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -138,6 +173,97 @@ def _maxplus_vals_fast(prev: np.ndarray, g: np.ndarray) -> np.ndarray:
         t_lo = n - j1 + 1          # rows below j1 have no candidate before
         out[j0:j1] = (win[j0:j1, t_lo:] + gr[t_lo:]).max(axis=1)
     return out
+
+
+def _maxplus_vals_fused(prev: np.ndarray, g: np.ndarray,
+                        band: Optional[int] = None,
+                        block: Optional[int] = None) -> np.ndarray:
+    """Tiled fused add+max max-plus convolution.
+
+    out[j] = max_{0 <= k <= min(j, band)} prev[j-k] + g[k]
+
+    Candidate tiles of at most (block, band+1) cells are added and
+    max-reduced immediately, so peak scratch is one tile — the (n x n)
+    candidate matrix of the plain kernels is never materialized.  With
+    ``band=None`` (dense) the candidate set per cell is exactly
+    ``_maxplus_vals``'s, so the output is bitwise identical.  A finite
+    band is sound — and still bitwise identical to dense — when ``prev``
+    is monotone non-decreasing and ``g`` is flat past the band: every
+    dropped candidate ``prev[j-k] + g[k]`` (k > band) is dominated by
+    ``prev[j-band] + g[band]``, and first-max tie-breaking already picks
+    the lowest k.
+
+    Tile orientation adapts to the band: a narrow band (<= 1/4 of the
+    width) lays k along the short outer axis and j along the long
+    contiguous axis, so numpy's per-row loop overhead scales with the
+    band instead of with n; wide/dense bands keep the j-blocked layout
+    whose tiles bound peak scratch at one (block, band+1) slab.  Both
+    orientations max-reduce the same candidate floats, so tiling never
+    changes values."""
+    n = prev.shape[0] - 1
+    b = n if band is None else max(0, min(int(band), n))
+    pad = np.concatenate([np.full(b, NEG), prev])
+    if 4 * (b + 1) <= n + 1:           # narrow band: k-major tiles
+        winT = np.lib.stride_tricks.sliding_window_view(pad, n + 1)
+        gr = g[b::-1][:, None]         # gr[t] = g[b - t], i.e. k = b - t
+        width = max(128, 131072 // (b + 1)) if block is None else block
+        out = np.empty(n + 1)
+        for j0 in range(0, n + 1, width):
+            j1 = min(j0 + width, n + 1)
+            out[j0:j1] = (winT[:, j0:j1] + gr).max(axis=0)
+        return out
+    if block is None:
+        block = 128
+    win = np.lib.stride_tricks.sliding_window_view(pad, b + 1)
+    gr = g[b::-1]
+    out = np.empty(n + 1)
+    for j0 in range(0, n + 1, block):
+        j1 = min(j0 + block, n + 1)
+        t_lo = max(b - j1 + 1, 0)      # rows below j1 have no candidate before
+        out[j0:j1] = (win[j0:j1, t_lo:] + gr[t_lo:]).max(axis=1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Max-plus backend switch: numpy (float64, default) or the Pallas kernel
+# (kernels.maxplus.maxplus_conv, float32; interpret off-TPU).
+# ---------------------------------------------------------------------------
+
+_BACKEND_ENV = "REPRO_PLANNER_BACKEND"
+_BACKENDS = ("numpy", "pallas")
+_backend_override: Optional[str] = None
+
+
+def set_maxplus_backend(name: Optional[str]) -> None:
+    """Select the max-plus convolution backend for the incremental engines:
+    ``"numpy"`` / ``"pallas"``, or ``None`` to defer to the
+    ``REPRO_PLANNER_BACKEND`` env var (default numpy)."""
+    global _backend_override
+    if name is not None and name not in _BACKENDS:
+        raise ValueError(f"unknown max-plus backend {name!r}; "
+                         f"choose from {_BACKENDS}")
+    _backend_override = name
+
+
+def get_maxplus_backend() -> str:
+    if _backend_override is not None:
+        return _backend_override
+    env = os.environ.get(_BACKEND_ENV, "").strip().lower()
+    if env and env not in _BACKENDS:
+        raise ValueError(f"{_BACKEND_ENV}={env!r} is not recognized; "
+                         f"choose from {_BACKENDS}")
+    return env or "numpy"
+
+
+def _conv_vals(prev: np.ndarray, g: np.ndarray,
+               band: Optional[int] = None) -> np.ndarray:
+    """Backend-dispatched banded max-plus value kernel (segment-tree
+    engine's convolution).  Traceback-time argmax recovery stays on
+    numpy either way — only the value vectors go through the kernel."""
+    if get_maxplus_backend() == "pallas":
+        from repro.kernels.maxplus import maxplus_conv
+        return np.asarray(maxplus_conv(prev, g, band=band), dtype=float)
+    return _maxplus_vals_fused(prev, g, band)
 
 
 def _argmax_at(prev: np.ndarray, g: np.ndarray, j: int) -> int:
@@ -270,16 +396,24 @@ class PlanTable:
                  workers_per_fault: int = 8, incremental: bool = True,
                  solver=None, lazy: bool = False,
                  cache: Optional["PlannerCache"] = None,
-                 n_budget: Optional[int] = None):
+                 n_budget: Optional[int] = None,
+                 engine: str = "segtree"):
         """``incremental=False`` falls back to one full solve per scenario;
         ``solver`` then picks the per-scenario solver (default ``solve``;
         pass ``solve_reference`` for the all-scalar baseline).
+
+        ``engine``: ``"segtree"`` (dyadic segment tree over task
+        positions, O(log m) invalidation per churn step, banded
+        convolutions where caps allow) or ``"chain"`` (the PR-2
+        prefix/suffix DP chains, kept as the churn-rebuild baseline).
 
         ``n_budget``: size the DP value arrays for this many workers (>=
         the largest scenario budget).  Plans are unchanged — every
         scenario argmax is sliced to its own budget — but a *fixed*
         budget (e.g. cluster capacity + one node) keeps chain-cache keys
         and array shapes identical across rebuilds at different totals."""
+        if engine not in ("segtree", "chain"):
+            raise ValueError(f"unknown PlanTable engine {engine!r}")
         self.tasks = tuple(tasks)
         self.assignment = tuple(assignment)
         self.hw = hw
@@ -287,6 +421,7 @@ class PlanTable:
         self.d_transition = d_transition
         self.workers_per_fault = workers_per_fault  # a node drain = 8 GPUs
         self.n_budget = n_budget
+        self.engine = engine
         self._solver = solver or solve
         self._cache = cache
         self.table: Dict[str, Plan] = {}
@@ -348,12 +483,14 @@ class PlanTable:
         self._T: List[Optional[np.ndarray]] = [None] * (m + 1)
         self._P[0] = np.zeros(self._n_max + 1)
         self._T[m] = np.zeros(self._n_max + 1)
-        # Uncached (eager) tables keep the plain kernel on purpose: that
-        # path IS the preserved per-event scalar baseline whose wall-clock
-        # the bench speedup floors are measured against, and the plain
-        # kernel matches the PR-1 implementation's cost profile.  Outputs
-        # are bitwise identical either way.
+        # The chain engine keeps the PR-1/PR-2 kernels on purpose: that
+        # path IS the preserved churn-rebuild baseline whose wall-clock
+        # the bench speedup floors are measured against.  The segment
+        # tree runs on the fused banded kernel (backend-dispatched);
+        # outputs of all kernels are bitwise identical on the same
+        # candidate sets.
         self._conv = _maxplus_vals_fast if self._cache else _maxplus_vals
+        self._V: Dict[Tuple[int, int], np.ndarray] = {}
         cache = self._cache
         if cache is not None:
             self._pairs = tuple((cache.task_id(t), x)
@@ -458,7 +595,7 @@ class PlanTable:
             assign[t - offset] = k
             budget -= k
 
-    def _assemble(self, key: str) -> Optional[Plan]:
+    def _assemble_chain(self, key: str) -> Optional[Plan]:
         """Build one scenario plan from the shared rows and P/T chains
         (same combine order and tie-breaking as the eager build)."""
         m = len(self.tasks)
@@ -514,6 +651,181 @@ class PlanTable:
             rem = self.tasks[:ti] + self.tasks[ti + 1:]
             return Plan(tuple(assign), total, self._cwaf(rem, assign))
         return None
+
+    # ---- segment-tree engine: dyadic span merges + complement chains ------
+
+    def _band(self, i: int, faulted: bool = False) -> Optional[int]:
+        """Band of task i's reward row: the row is flat past it (worker
+        cap; plus the unfaulted row's no-transition spike at x_old), so
+        banded convolutions with it are exact.  None = uncapped/dense."""
+        cap = self.tasks[i].max_workers
+        if cap is None:
+            return None
+        b = min(max(cap, 0), self._n_max)
+        if not faulted:                    # g[x_old] spike breaks flatness
+            b = min(max(b, self.assignment[i]), self._n_max)
+        return b
+
+    def _sat(self, lo: int, hi: int) -> int:
+        """Saturation of span [lo, hi): V[lo, hi) is flat past the sum of
+        its tasks' bands (more workers than every cap combined are idle)."""
+        s = 0
+        for i in range(lo, hi):
+            b = self._band(i)
+            s += self._n_max if b is None else b
+            if s >= self._n_max:
+                return self._n_max
+        return s
+
+    def _vkey(self, lo: int, hi: int):
+        return ("V", self._sig, self._pairs[lo:hi])
+
+    def _vvec(self, lo: int, hi: int) -> np.ndarray:
+        """V[lo, hi): max-plus merge of the span's reward rows (best span
+        reward using at most j workers), built by dyadic midpoint split
+        and cached by span *contents* — a churn step at task u only
+        invalidates the O(log m) spans containing u."""
+        got = self._V.get((lo, hi))
+        if got is not None:
+            return got
+        arr = None
+        if self._cache is not None:
+            arr = self._cache.array(self._vkey(lo, hi))
+        if arr is None:
+            if hi - lo == 1:
+                arr = np.maximum.accumulate(self._row(lo))
+            else:
+                mid = (lo + hi) // 2
+                left, right = self._vvec(lo, mid), self._vvec(mid, hi)
+                sl, sr = self._sat(lo, mid), self._sat(mid, hi)
+                if sl < sr:               # band by the flatter operand
+                    arr = _conv_vals(right, left,
+                                     sl if sl < self._n_max else None)
+                else:
+                    arr = _conv_vals(left, right,
+                                     sr if sr < self._n_max else None)
+            if self._cache is not None:
+                self._cache.array(self._vkey(lo, hi), lambda: arr)
+        self._V[(lo, hi)] = arr
+        return arr
+
+    def _path_sibs(self, ti: int) -> List[Tuple[int, int]]:
+        """Siblings along the root -> leaf(ti) path, top-down: their
+        union is every task except ti."""
+        sibs: List[Tuple[int, int]] = []
+        lo, hi = 0, len(self.tasks)
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if ti < mid:
+                sibs.append((mid, hi))
+                hi = mid
+            else:
+                sibs.append((lo, mid))
+                lo = mid
+        return sibs
+
+    def _ckey(self, sibs: Sequence[Tuple[int, int]]):
+        return ("C", self._sig, tuple(self._pairs[a:b] for a, b in sibs))
+
+    def _compl_chain(self, ti: int):
+        """Complement chain of leaf ti: Cs[i] merges the first i root-path
+        siblings, so Cs[-1] is the DP value vector over every task except
+        ti (the ``finish:ti`` vector, and the ``fault:ti`` base)."""
+        sibs = self._path_sibs(ti)
+        Cs = [np.zeros(self._n_max + 1)]
+        satc = 0
+        for i, (a, b) in enumerate(sibs):
+            C = None
+            if self._cache is not None:
+                C = self._cache.array(self._ckey(sibs[: i + 1]))
+            if C is None:
+                sat_v = self._sat(a, b)
+                if satc < sat_v:          # band by the flatter operand
+                    C = _conv_vals(self._vvec(a, b), Cs[i],
+                                   satc if satc < self._n_max else None)
+                else:
+                    C = _conv_vals(Cs[i], self._vvec(a, b),
+                                   sat_v if sat_v < self._n_max else None)
+                if self._cache is not None:
+                    self._cache.array(self._ckey(sibs[: i + 1]), lambda: C)
+            satc = min(satc + self._sat(a, b), self._n_max)
+            Cs.append(C)
+        return sibs, Cs
+
+    def _walk_span(self, lo: int, hi: int, budget: int,
+                   assign: List[int]) -> None:
+        """Traceback inside span [lo, hi): recover the per-task workers
+        achieving V[lo, hi)[budget] by descending the tree (first-max
+        splits, like the chain walks)."""
+        if hi - lo == 1:
+            assign[lo] = int(np.argmax(self._row(lo)[:budget + 1]))
+            return
+        mid = (lo + hi) // 2
+        b = _argmax_at(self._vvec(lo, mid), self._vvec(mid, hi), budget)
+        self._walk_span(mid, hi, b, assign)
+        self._walk_span(lo, mid, budget - b, assign)
+
+    def _walk_compl(self, sibs, Cs, budget: int,
+                    assign: List[int]) -> None:
+        for i in range(len(sibs) - 1, -1, -1):
+            a, b_hi = sibs[i]
+            b = _argmax_at(Cs[i], self._vvec(a, b_hi), budget)
+            self._walk_span(a, b_hi, b, assign)
+            budget -= b
+
+    def _assemble_segtree(self, key: str) -> Optional[Plan]:
+        """Build one scenario plan from O(log m) cached node merges."""
+        m = len(self.tasks)
+        if key == "join:1":
+            root = self._vvec(0, m)
+            j = int(np.argmax(root[:self._n_join + 1]))
+            assign = [0] * m
+            self._walk_span(0, m, j, assign)
+            return Plan(tuple(assign), float(root[j]),
+                        self._cwaf(self.tasks, assign))
+        kind, _, idx = key.partition(":")
+        if not idx.isdigit():
+            return None
+        ti = int(idx)
+        if not 0 <= ti < m:
+            return None
+        if kind not in ("fault", "finish"):
+            return None
+        sibs, Cs = self._compl_chain(ti)
+        C = Cs[-1]
+        if kind == "fault":
+            frow = self._row(ti, faulted=True)
+            combined = None
+            fkey = None
+            if self._cache is not None:
+                fkey = ("FM", self._sig,
+                        (self._pairs[:ti], self._pairs[ti + 1:]),
+                        self._pairs[ti])
+                combined = self._cache.array(fkey)
+            if combined is None:
+                combined = _conv_vals(C, frow, self._band(ti, faulted=True))
+                if self._cache is not None:
+                    self._cache.array(fkey, lambda: combined)
+            j = int(np.argmax(combined[:self._n_fault + 1]))
+            total = float(combined[j])
+            assign = [0] * m
+            k = _argmax_at(C, frow, j)
+            assign[ti] = k
+            self._walk_compl(sibs, Cs, j - k, assign)
+            return Plan(tuple(assign), total,
+                        self._cwaf(self.tasks, assign))
+        j = int(np.argmax(C[:self._n_now + 1]))
+        total = float(C[j])
+        assign = [0] * m
+        self._walk_compl(sibs, Cs, j, assign)
+        del assign[ti]
+        rem = self.tasks[:ti] + self.tasks[ti + 1:]
+        return Plan(tuple(assign), total, self._cwaf(rem, assign))
+
+    def _assemble(self, key: str) -> Optional[Plan]:
+        if self.engine == "segtree":
+            return self._assemble_segtree(key)
+        return self._assemble_chain(key)
 
     def lookup(self, key: str) -> Optional[Plan]:
         plan = self.table.get(key)
@@ -594,16 +906,19 @@ class PlannerCache:
     def table(self, tasks: Sequence[Task], assignment: Sequence[int],
               hw: Hardware, d_running: float, d_transition: float,
               workers_per_fault: int = 8,
-              n_budget: Optional[int] = None) -> PlanTable:
+              n_budget: Optional[int] = None,
+              engine: str = "segtree") -> PlanTable:
         """A lazy PlanTable for this cluster state, memoized by state."""
         tasks, assignment = tuple(tasks), tuple(assignment)
         key = (tuple(self.task_id(t) for t in tasks), assignment, hw,
-               d_running, d_transition, workers_per_fault, n_budget)
+               d_running, d_transition, workers_per_fault, n_budget,
+               engine)
         return self._memo(
             self._tables, "tables", key,
             lambda: PlanTable(tasks, assignment, hw, d_running,
                               d_transition, workers_per_fault,
-                              lazy=True, cache=self, n_budget=n_budget))
+                              lazy=True, cache=self, n_budget=n_budget,
+                              engine=engine))
 
     def solve(self, inp: PlanInput, hw: Hardware) -> Plan:
         """Memoized fresh dispatch (``solve_fast`` — same plans as

@@ -238,7 +238,9 @@ def task_churn(*, span_s: float, seed: int, n_nodes: int,
                ) -> ClusterScenario:
     """Join/finish churn (Figure 7 triggers 5 and 6): ``n_finishes``
     distinct initial slots complete, ``n_arrivals`` tasks from the
-    candidate catalog are admitted."""
+    candidate catalog are admitted.  Cap-aware: an arriving task with a
+    ``max_workers`` ceiling never hints for more than its cap (the
+    planner's banded reward rows make the excess worthless anyway)."""
     rng = np.random.default_rng(seed)
     n_finishes = min(n_finishes, m_initial)
     churn: List[object] = []
@@ -249,8 +251,12 @@ def task_churn(*, span_s: float, seed: int, n_nodes: int,
     picks = rng.integers(0, len(candidates), size=n_arrivals)
     for pick, t in zip(picks, rng.uniform(0.1 * span_s, 0.8 * span_s,
                                           size=n_arrivals)):
-        churn.append(TaskArrival(time=float(t), task=candidates[int(pick)],
-                                 workers_hint=workers_hint))
+        cand = candidates[int(pick)]
+        hint = workers_hint
+        if getattr(cand, "max_workers", None) is not None:
+            hint = min(hint, cand.max_workers)
+        churn.append(TaskArrival(time=float(t), task=cand,
+                                 workers_hint=hint))
     churn.sort(key=lambda e: e.time)
     return ClusterScenario("churn", n_nodes, gpus_per_node, span_s,
                            churn=churn, seed=seed)

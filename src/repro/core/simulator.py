@@ -469,11 +469,14 @@ class TraceSimulator:
             self._apply_unicron_plan()
             self.n_reconfigs += 1
         else:
-            # baselines: grant from the free pool, node-granular
+            # baselines: grant from the free pool, node-granular, capped
+            # at the task's worker ceiling (workers past it would idle)
             self._ci.append(None)
             assigned = sum(t.workers for t in self.tasks)
             free = max(self.cluster.healthy_workers() - assigned, 0)
             grant = min(ev.workers_hint, free)
+            if ev.task.max_workers is not None:
+                grant = min(grant, ev.task.max_workers)
             st.workers = grant - grant % self.gpn
         self.cluster.assign([t.workers for t in self.tasks])
 

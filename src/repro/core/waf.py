@@ -18,10 +18,16 @@ from repro.core.costmodel import Hardware, TaskModel
 
 @dataclass(frozen=True)
 class Task:
-    """A cluster training task: model + priority weight + min requirement."""
+    """A cluster training task: model + priority weight + min requirement.
+
+    ``max_workers`` is a per-task worker ceiling (data-parallel width
+    limits, quota, license caps): workers past the cap idle, so F(t, ·)
+    is *flat* past it.  The planner exploits the flat tail with banded
+    max-plus convolutions (band cap+1 instead of n)."""
     model: TaskModel
     weight: float = 1.0                    # w(t), recommended 0.5..2.0
     min_workers: Optional[int] = None      # T_necessary(t); None = auto
+    max_workers: Optional[int] = None      # worker cap; None = uncapped
 
     def necessary(self, hw: Hardware) -> int:
         if self.min_workers is not None:
@@ -30,7 +36,13 @@ class Task:
 
 
 def waf(task: Task, x: int, hw: Hardware) -> float:
-    """F(t, x) = w(t) * T(t, x) if requirement satisfied else 0 (Eq. 2)."""
+    """F(t, x) = w(t) * T(t, x) if requirement satisfied else 0 (Eq. 2).
+    Workers past ``task.max_workers`` idle: x is clamped to the cap before
+    both the requirement check and the throughput lookup, so a task whose
+    cap sits below its requirement floor can never run."""
+    cap = getattr(task, "max_workers", None)   # duck-typed test tasks
+    if cap is not None:
+        x = min(x, cap)
     if x < task.necessary(hw) or x <= 0:
         return 0.0
     return task.weight * costmodel.achieved_flops(task.model, x, hw)
@@ -50,11 +62,17 @@ def reward(task: Task, x_old: int, x_new: int, *, d_running: float,
 
 def waf_curve(task: Task, n: int, hw: Hardware) -> np.ndarray:
     """F(t, ·) for x = 0..n as one vector (Eq. 2), from the memoized
-    cost-model sweep: weight * T(t, x), zeroed below the requirement floor."""
-    curve = costmodel.throughput_curve(task.model, n, hw)
+    cost-model sweep: weight * T(t, x), zeroed below the requirement floor,
+    flat past ``task.max_workers`` (same values as the scalar ``waf`` at
+    every x)."""
+    curve = costmodel.throughput_curve(task.model, n, hw,
+                                       cap=task.max_workers)
     F = task.weight * curve.flops[:n + 1]          # fresh array (not a view)
-    floor = task.necessary(hw)
-    F[:min(max(floor, 1), n + 1)] = 0.0
+    floor = max(task.necessary(hw), 1)
+    if task.max_workers is not None and task.max_workers < floor:
+        F[:] = 0.0                      # cap below the requirement: never runs
+    else:
+        F[:min(floor, n + 1)] = 0.0
     return F
 
 
@@ -64,7 +82,14 @@ def waf_matrix(tasks, n: int, hw: Hardware) -> np.ndarray:
     F = costmodel.throughput_matrix([t.model for t in tasks], n, hw)
     for i, t in enumerate(tasks):
         F[i] *= t.weight
-        F[i, :min(max(t.necessary(hw), 1), n + 1)] = 0.0
+        floor = max(t.necessary(hw), 1)
+        cap = t.max_workers
+        if cap is not None and cap < floor:
+            F[i] = 0.0
+            continue
+        F[i, :min(floor, n + 1)] = 0.0
+        if cap is not None and cap < n:
+            F[i, cap + 1:] = F[i, cap]
     return F
 
 

@@ -9,6 +9,8 @@ jit'd wrapper and a ``ref.py`` pure-jnp oracle:
   * ssd_scan        — Mamba2 SSD chunk scan as dense MXU matmuls with the
     (P, N) recurrent state carried in VMEM.
   * rmsnorm         — fused normalization (one read + one write).
+  * maxplus         — banded max-plus (tropical) convolution, the
+    planner's DP inner loop (``REPRO_PLANNER_BACKEND=pallas``).
 
 Models select them with ``kernel="pallas"``; CPU validation runs through
 ``interpret=True``.

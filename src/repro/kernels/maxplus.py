@@ -1,0 +1,101 @@
+"""Pallas TPU max-plus (tropical) convolution — the planner's DP kernel.
+
+    out[j] = max_{0 <= k <= min(j, band)} prev[j-k] + g[k]
+
+One grid program per ``block`` output cells; the padded ``prev`` vector
+and the reward row ``g`` sit whole in VMEM (they are O(n) f32 — a few KB
+at planner scale), and the kernel folds the band with a ``fori_loop`` of
+fused shift+add+max steps, so no (n x n) candidate matrix ever exists in
+any memory space.  Follows the repo's execution-mode policy
+(``pallas_config``): compiled via Mosaic on TPU, interpreted on CPU/GPU,
+``REPRO_PALLAS_INTERPRET``/kwarg override.
+
+The kernel runs in float32 (planner's numpy path is float64); the
+``REPRO_PLANNER_BACKEND=pallas`` switch in ``core.planner`` therefore
+trades ~1e-7 relative reward precision for the TPU hot path and is
+opt-in.  ``tests/test_kernels.py`` pins interpret-mode equivalence
+against the numpy oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_config import resolve_interpret
+
+NEG = float("-inf")
+
+
+def _maxplus_kernel(prev_ref, g_ref, o_ref, *, band: int, block: int):
+    """o[dj] = max_k prev_pad[pid*block + band + dj - k] + g[k]."""
+    j0 = pl.program_id(0) * block
+
+    def body(k, acc):
+        w = prev_ref[0, pl.ds(j0 + band - k, block)]     # prev[j0+dj-k]
+        gk = g_ref[0, pl.ds(k, 1)]                       # g[k]
+        return jnp.maximum(acc, w + gk[0])
+
+    init = jnp.full((block,), NEG, dtype=jnp.float32)
+    o_ref[0, :] = jax.lax.fori_loop(0, band + 1, body, init)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "block", "interpret"))
+def _maxplus_call(prev_pad, g, band: int, block: int, interpret: bool):
+    grid_blocks = (prev_pad.shape[1] - band) // block
+    return pl.pallas_call(
+        functools.partial(_maxplus_kernel, band=band, block=block),
+        grid=(grid_blocks,),
+        in_specs=[
+            pl.BlockSpec(prev_pad.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, grid_blocks * block),
+                                       jnp.float32),
+        interpret=interpret,
+    )(prev_pad, g)
+
+
+def maxplus_conv(prev, g, band: Optional[int] = None, *,
+                 block: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Banded max-plus convolution of ``prev`` (DP value vector) with
+    ``g`` (reward row), both length n+1; returns the length-n+1 float32
+    value vector.  ``band=None`` is the dense convolution; a finite band
+    is exact under the planner's band contract (``prev`` monotone,
+    ``g`` flat past the band)."""
+    prev = jnp.asarray(prev, dtype=jnp.float32)
+    g = jnp.asarray(g, dtype=jnp.float32)
+    if prev.ndim != 1 or g.ndim != 1 or prev.shape != g.shape:
+        raise ValueError(f"prev/g must be equal-length vectors, got "
+                         f"{prev.shape} vs {g.shape}")
+    n = prev.shape[0] - 1
+    b = n if band is None else max(0, min(int(band), n))
+    interpret = resolve_interpret(interpret)
+    nb = max(1, -(-(n + 1) // block))                    # cdiv
+    length = nb * block
+    prev_pad = jnp.full((1, b + length), NEG, dtype=jnp.float32)
+    prev_pad = prev_pad.at[0, b:b + n + 1].set(prev)
+    g_pad = jnp.full((1, max(n + 1, block)), NEG, dtype=jnp.float32)
+    g_pad = g_pad.at[0, :n + 1].set(g)
+    out = _maxplus_call(prev_pad, g_pad, b, block, interpret)
+    return out[0, :n + 1]
+
+
+def maxplus_conv_np(prev: np.ndarray, g: np.ndarray,
+                    band: Optional[int] = None) -> np.ndarray:
+    """Float32 numpy oracle with the kernel's exact candidate arithmetic
+    (f32 adds, order-free max) — the interpret-mode equivalence target."""
+    prev32 = np.asarray(prev, dtype=np.float32)
+    g32 = np.asarray(g, dtype=np.float32)
+    n = prev32.shape[0] - 1
+    b = n if band is None else max(0, min(int(band), n))
+    pad = np.concatenate([np.full(b, NEG, dtype=np.float32), prev32])
+    win = np.lib.stride_tricks.sliding_window_view(pad, b + 1)
+    return (win + g32[b::-1][None, :]).max(axis=1)

@@ -93,3 +93,63 @@ def test_duplicate_reports_deduplicated(loop):
     n1 = len(cl.tick(now=200.0))
     n2 = len(cl.tick(now=300.0))
     assert n1 == 1 and n2 == 0
+
+
+def test_agent_task_finished_report_fires_trigger(loop):
+    """Agents announce task completion through the KV store and the next
+    tick fires the coordinator's ``task_finished`` trigger end-to-end:
+    the entry is dropped, the survivors are replanned, and the event
+    carries the plan (Figure 7 trigger 5)."""
+    cl, agents, cluster, coord = loop
+    assert len(coord.entries) == 2
+    rec = agents[4].report_task_finished(task_index=0, now=50.0,
+                                         epoch=coord.plan_epoch)
+    assert rec["task"] == 0
+    events = cl.tick(now=51.0)
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.kind is None and ev.action is Action.RESUME
+    assert len(coord.entries) == 1
+    assert ev.plan is not None and len(ev.plan) == 1
+    assert sum(ev.plan) <= cluster.healthy_workers()
+    assert coord.plan_stats.task_finishes == 1
+    assert cl.events[-1] is ev                 # recorded exactly once
+    assert len(cl.events) == 1
+    # the report is consumed: the next tick is quiet
+    assert cl.tick(now=52.0) == []
+
+
+def test_agent_task_finished_reports_deduplicated(loop):
+    """Every worker of a task may announce completion; one tick fires the
+    trigger once per task, and out-of-range indices are ignored."""
+    cl, agents, cluster, coord = loop
+    e = coord.plan_epoch
+    for node in (1, 2, 3):
+        agents[node].report_task_finished(task_index=1, now=10.0, epoch=e)
+    agents[5].report_task_finished(task_index=7, now=10.0,   # no such task
+                                   epoch=e)
+    events = cl.tick(now=11.0)
+    assert len(events) == 1
+    assert len(coord.entries) == 1
+    assert cl.tick(now=12.0) == []
+
+
+def test_stale_epoch_task_report_never_removes_wrong_task(loop):
+    """Task indices are positional: a duplicate finish report that drains
+    only after the task set already shifted carries a stale plan epoch
+    and must be consumed without firing — not resolved against the new
+    index 0 (which now names a different, still-running task)."""
+    cl, agents, cluster, coord = loop
+    survivor = coord.entries[1].task
+    old_epoch = coord.plan_epoch
+    agents[0].report_task_finished(task_index=0, now=50.0, epoch=old_epoch)
+    assert len(cl.tick(now=50.5)) == 1         # task 0 finished
+    assert len(coord.entries) == 1
+    assert coord.plan_epoch == old_epoch + 1
+    # a second worker of the *same* finished task reports late with the
+    # (index, epoch) pair it learned at dispatch time — now stale
+    agents[1].report_task_finished(task_index=0, now=51.0,
+                                   epoch=old_epoch)
+    assert cl.tick(now=51.5) == []             # stale report: no event
+    assert len(coord.entries) == 1             # survivor still running
+    assert coord.entries[0].task is survivor

@@ -171,6 +171,90 @@ def test_rmsnorm_grad():
 
 
 # ---------------------------------------------------------------------------
+# max-plus convolution (planner DP kernel)
+# ---------------------------------------------------------------------------
+
+
+def _maxplus_case(seed, monotone=False, cap=None):
+    rng = np.random.RandomState(seed)
+    n = rng.randint(0, 200)
+    prev = rng.uniform(-50.0, 50.0, n + 1)
+    if monotone:
+        prev = np.maximum.accumulate(prev)
+    g = rng.uniform(-50.0, 50.0, n + 1)
+    band = None
+    if cap is not None:
+        band = min(cap, n)
+        g[band:] = g[band]
+    return prev, g, band
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_maxplus_dense_matches_numpy_oracle(seed):
+    """Pallas maxplus (interpret off-TPU) == the f32 numpy oracle with the
+    kernel's candidate arithmetic, dense band."""
+    from repro.kernels.maxplus import maxplus_conv, maxplus_conv_np
+    prev, g, _ = _maxplus_case(seed)
+    got = np.asarray(maxplus_conv(prev, g))
+    want = maxplus_conv_np(prev, g)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed,cap", [(0, 0), (1, 1), (2, 7), (3, 32),
+                                      (4, 100)])
+def test_maxplus_banded_matches_dense(seed, cap):
+    """Under the band contract (monotone prev, g flat past the band) the
+    banded kernel equals the dense convolution."""
+    from repro.kernels.maxplus import maxplus_conv, maxplus_conv_np
+    prev, g, band = _maxplus_case(seed, monotone=True, cap=cap)
+    got = np.asarray(maxplus_conv(prev, g, band=band))
+    dense = maxplus_conv_np(prev, g)           # f32 oracle, full band
+    np.testing.assert_allclose(got, dense, rtol=1e-6, atol=1e-5)
+
+
+def test_maxplus_matches_planner_float64_kernel():
+    """The float32 kernel tracks the planner's float64 value kernel to f32
+    precision on O(100) data — the interpret-mode equivalence the CI step
+    pins (``_maxplus_vals`` is the PR-1 ground-truth kernel)."""
+    from repro.core.planner import _maxplus_vals
+    from repro.kernels.maxplus import maxplus_conv
+    for seed in range(6):
+        prev, g, _ = _maxplus_case(seed, monotone=True)
+        got = np.asarray(maxplus_conv(prev, g))
+        want = _maxplus_vals(prev, g)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_maxplus_planner_backend_end_to_end():
+    """A PlanTable built with REPRO_PLANNER_BACKEND=pallas (via the
+    setter) matches the all-scalar reference table to f32 tolerance."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import A800, TaskModel
+    from repro.core.planner import (PlanTable, set_maxplus_backend,
+                                    solve_reference)
+    from repro.core.waf import Task
+    tasks = [Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                            global_batch=256),
+                  weight=1.0, max_workers=8),
+             Task(model=TaskModel.from_arch(get_arch("gpt3-7b"),
+                                            global_batch=256),
+                  weight=1.3)]
+    ref = PlanTable(tasks, [8, 16], A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    set_maxplus_backend("pallas")
+    try:
+        seg = PlanTable(tasks, [8, 16], A800, 3600.0, 120.0)
+    finally:
+        set_maxplus_backend(None)
+    assert set(seg.table) == set(ref.table)
+    for key in ref.table:
+        a, b = seg.table[key], ref.table[key]
+        rel = abs(a.total_reward - b.total_reward) / max(
+            1.0, abs(b.total_reward))
+        assert rel < 1e-5, (key, rel)
+
+
+# ---------------------------------------------------------------------------
 # end-to-end kernel path
 # ---------------------------------------------------------------------------
 

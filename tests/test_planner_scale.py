@@ -8,21 +8,23 @@ from repro.configs import get_arch
 from repro.core import costmodel, waf
 from repro.core.costmodel import A800, TPU_V5E, TaskModel
 from repro.core.planner import (PlanInput, PlannerCache, PlanTable,
-                                _maxplus, brute_force, solve,
+                                _maxplus, _maxplus_vals,
+                                _maxplus_vals_fused, brute_force, solve,
                                 solve_reference)
 from repro.core.waf import Task
 
 SIZES = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
 
 
-def _task(size="gpt3-1.3b", weight=1.0, gb=256):
+def _task(size="gpt3-1.3b", weight=1.0, gb=256, cap=None):
     return Task(model=TaskModel.from_arch(get_arch(size), global_batch=gb),
-                weight=weight)
+                weight=weight, max_workers=cap)
 
 
-def _tasks(m):
+def _tasks(m, caps=None):
     return [_task(SIZES[i % len(SIZES)], weight=0.5 + 0.1 * i,
-                  gb=128 if i % 2 else 256) for i in range(m)]
+                  gb=128 if i % 2 else 256,
+                  cap=caps[i] if caps else None) for i in range(m)]
 
 
 def _inp(tasks, assignment, n, d_run=3600.0, d_tr=120.0, faulted=None):
@@ -167,6 +169,53 @@ def test_solve_equals_reference_on_random_tables():
         assert got.assignment == want.assignment, trial
 
 
+def test_fused_kernel_bitwise_identical_to_plain():
+    """The tiled fused add+max kernel (both orientations) reduces exactly
+    the candidate set of ``_maxplus_vals`` — outputs are bitwise equal."""
+    rng = np.random.RandomState(3)
+    for _ in range(120):
+        n = rng.randint(0, 70)
+        prev = rng.uniform(-5, 5, n + 1)
+        g = rng.uniform(-5, 5, n + 1)
+        want = _maxplus_vals(prev, g)
+        assert np.array_equal(want, _maxplus_vals_fused(prev, g))
+        assert np.array_equal(want, _maxplus_vals_fused(prev, g, block=4))
+
+
+def test_banded_kernel_bitwise_identical_under_contract():
+    """With monotone prev and g flat past the band — the invariants the
+    planner guarantees — the banded kernel equals the dense one bitwise,
+    at every band including 0 and n."""
+    rng = np.random.RandomState(4)
+    for _ in range(120):
+        n = rng.randint(1, 70)
+        cap = rng.randint(0, n + 1)
+        prev = np.maximum.accumulate(rng.uniform(-5, 5, n + 1))
+        g = rng.uniform(-5, 5, n + 1)
+        g[cap:] = g[cap]
+        want = _maxplus_vals(prev, g)
+        assert np.array_equal(want, _maxplus_vals_fused(prev, g, band=cap))
+
+
+def test_waf_flat_past_cap_matches_scalar():
+    """Capped tasks: the vector F(t, ·) is flat past the cap and equal to
+    the scalar ``waf`` (which clamps x) at every x — including a cap
+    below the requirement floor (the task can then never run)."""
+    for cap in (0, 4, 12, 64, None):
+        t = _task("gpt3-7b", weight=1.1, cap=cap)
+        F = waf.waf_curve(t, 96, A800)
+        for x in range(97):
+            assert F[x] == pytest.approx(waf.waf(t, x, A800),
+                                         rel=1e-12, abs=0.0), (cap, x)
+        if cap is not None and cap < 96:
+            assert np.all(F[cap:] == F[min(cap, 96)])
+    M = waf.waf_matrix([_task(cap=8), _task("gpt3-7b", cap=2)], 64, A800)
+    for i, t in enumerate([_task(cap=8), _task("gpt3-7b", cap=2)]):
+        for x in range(65):
+            assert M[i, x] == pytest.approx(waf.waf(t, x, A800),
+                                            rel=1e-12, abs=0.0)
+
+
 # ---- (c) incremental PlanTable vs scenario-by-scenario solves -------------
 
 
@@ -274,3 +323,105 @@ def test_cached_table_matches_reference_under_random_churn():
         assignment[i] = rng.choice([4, 8, 12, 16])
     stats = cache.stats()
     assert stats["hits"]["arrays"] > 0        # chains were reused
+
+
+# ---- (e) segment-tree engine ----------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,caps", [
+    (1, 8, [None]), (2, 16, [6, None]), (3, 36, [10, None, 8]),
+    (5, 60, [12, 12, None, 4, 50]), (6, 96, [None] * 6)])
+def test_segtree_table_matches_reference(m, n, caps):
+    """Segment-tree tables (the default engine) match the all-scalar
+    reference on capped and uncapped fleets, with feasible tracebacks:
+    the traced assignment's scalar reward re-sums to the DP total."""
+    tasks = _tasks(m, caps=caps)
+    assignment = [n // m] * m
+    seg = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+    assert seg.engine == "segtree"
+    ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    assert set(seg.table) == set(ref.table)
+    n_now = sum(assignment)
+    w = seg.workers_per_fault
+    for key in ref.table:
+        a, b = seg.table[key], ref.table[key]
+        assert a.total_reward == pytest.approx(b.total_reward,
+                                               rel=1e-9), key
+        budget = {"join:1": n_now + w}.get(
+            key, n_now if key.startswith("finish")
+            else max(n_now - w, 0))
+        assert sum(a.assignment) <= budget, (key, a)
+        # traceback consistency: re-score the plan with the scalar reward
+        kind, _, idx = key.partition(":")
+        if kind == "finish":
+            rem = [(t, assignment[i]) for i, t in enumerate(tasks)
+                   if i != int(idx)]
+        else:
+            rem = list(zip(tasks, assignment))
+        total = sum(waf.reward(
+            t, x_old, x_new, d_running=3600.0, d_transition=120.0,
+            worker_faulted=(kind == "fault" and i == int(idx)), hw=A800)
+            for i, ((t, x_old), x_new) in enumerate(zip(rem, a.assignment)))
+        assert total == pytest.approx(a.total_reward, rel=1e-9), key
+
+
+def test_segtree_lazy_cached_identical_to_eager():
+    """Lazy cache-assembled segment-tree scenarios are bit-identical to
+    the eager uncached build (same node merges, same kernel)."""
+    tasks = _tasks(5, caps=[8, None, 12, None, 6])
+    cache = PlannerCache()
+    assignment = [12, 12, 12, 12, 12]
+    eager = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+    lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0)
+    for key in eager.table:
+        got = lazy.lookup(key)
+        assert got.assignment == eager.table[key].assignment, key
+        assert got.total_reward == eager.table[key].total_reward, key
+
+
+def test_segtree_and_chain_engines_agree():
+    """Both incremental engines implement the same optimum: totals agree
+    to float-reassociation tolerance on every scenario."""
+    tasks = _tasks(7, caps=[16, None, 8, 24, None, 12, 16])
+    assignment = [12] * 7
+    seg = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="segtree")
+    chain = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                      engine="chain")
+    assert set(seg.table) == set(chain.table)
+    for key in seg.table:
+        assert seg.table[key].total_reward == pytest.approx(
+            chain.table[key].total_reward, rel=1e-9), key
+
+
+def test_segtree_cached_churn_reuses_log_m_nodes():
+    """A one-task churn step through a shared cache recomputes only the
+    O(log m) tree nodes whose span contains the change (plus the
+    complements crossing them) — most array lookups are hits."""
+    m = 8
+    tasks = _tasks(m, caps=[12] * m)
+    cache = PlannerCache()
+    assignment = [8] * m
+    t1 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80)
+    for key in t1.scenario_keys():
+        t1.lookup(key)
+    before = dict(cache.misses)
+    assignment[3] = 12
+    t2 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80)
+    for key in t2.scenario_keys():
+        t2.lookup(key)
+    new_arrays = cache.misses["arrays"] - before["arrays"]
+    # full from-scratch assembly costs > 3 arrays per scenario; the
+    # cached rebuild must reuse far more than it recomputes
+    assert new_arrays < 2 * len(t2.scenario_keys()), new_arrays
+    ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    for key in ref.table:
+        assert t2.lookup(key).total_reward == pytest.approx(
+            ref.table[key].total_reward, rel=1e-9), key
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        PlanTable(_tasks(1), [4], A800, 3600.0, 120.0, engine="btree")

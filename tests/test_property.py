@@ -88,6 +88,55 @@ def test_cached_plan_table_matches_reference_under_churn(data, m):
         assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
 
 
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(), m=st.integers(min_value=1, max_value=4))
+def test_segtree_plan_table_matches_reference_under_capped_churn(data, m):
+    """ISSUE 3 property: random cap-constrained churn sequences driven
+    through the segment-tree PlanTable (shared PlannerCache, so node
+    merges are reused across rebuilds) must reproduce the scalar
+    reference's reward on every scenario of every intermediate state,
+    and the traced plans must be feasible (budget + flat-past-cap)."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import A800, TaskModel
+    from repro.core.planner import PlannerCache, PlanTable
+    from repro.core.waf import Task
+
+    sizes = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+    caps = [data.draw(st.sampled_from([4, 8, 12, None])) for _ in range(m)]
+    tasks = [Task(model=TaskModel.from_arch(get_arch(sizes[i % 4]),
+                                            global_batch=128 if i % 2
+                                            else 256),
+                  weight=0.5 + 0.1 * i, max_workers=caps[i])
+             for i in range(m)]
+    cache = PlannerCache()
+    assignment = [data.draw(st.sampled_from([4, 8, 12])) for _ in range(m)]
+    for _ in range(data.draw(st.integers(min_value=1, max_value=3))):
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           workers_per_fault=4, n_budget=52,
+                           engine="segtree")
+        ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                        workers_per_fault=4, incremental=False,
+                        solver=solve_reference)
+        n_now = sum(assignment)
+        for key in ref.table:
+            got = lazy.lookup(key)
+            want = ref.table[key]
+            assert abs(got.total_reward - want.total_reward) \
+                <= 1e-9 * max(1.0, abs(want.total_reward)), key
+            budget = {"join:1": n_now + 4}.get(
+                key, n_now if key.startswith("finish")
+                else max(n_now - 4, 0))
+            assert sum(got.assignment) <= budget, (key, got)
+            kind, _, idx = key.partition(":")
+            kept = [i for i in range(m)
+                    if not (kind == "finish" and i == int(idx))]
+            for i, x in zip(kept, got.assignment):
+                if caps[i] is not None:
+                    assert x <= max(caps[i], assignment[i]), (key, got)
+        i = data.draw(st.integers(min_value=0, max_value=m - 1))
+        assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     data=st.data(),
