@@ -32,7 +32,12 @@ def run() -> list:
             "baseline_s": detection_time(kind, AVG_ITER_S, unicron=False),
         })
 
-    # monitoring hot-path overhead (runs on CPU beside the training proc)
+    # Monitoring hot-path overhead (runs on CPU beside the training proc).
+    # These paths are tens of nanoseconds to single-digit microseconds, so
+    # each timed sample batches >= 10k calls and the row reports ns/op —
+    # a handful of single-call samples is pure clock noise and useless for
+    # an overhead claim.  The ``overhead`` rows stay excluded from the
+    # ``check_regression`` ratio gate (wall-clock, machine-dependent).
     kv = KVStore()
     agent = UnicronAgent(0, kv)
 
@@ -43,10 +48,15 @@ def run() -> list:
         agent.observe_iteration(30.0)
         agent.check_progress(31.0)
 
-    rows.append({"case": "overhead heartbeat", "method": "kv put+lease",
-                 "unicron_s": timeit(hb, iters=5) , "baseline_s": 0.0})
-    rows.append({"case": "overhead stat-monitor", "method": "observe+check",
-                 "unicron_s": timeit(stat, iters=5), "baseline_s": 0.0})
+    for case, method, fn in (
+            ("overhead heartbeat", "kv put+lease", hb),
+            ("overhead stat-monitor", "observe+check", stat)):
+        per_call_s = timeit(fn, iters=5, number=10_000)
+        rows.append({"case": case, "method": method,
+                     "unicron_s": per_call_s,
+                     "unicron_ns_per_op": per_call_s * 1e9,
+                     "baseline_s": 0.0})
     emit(rows, "detection",
-         ["case", "method", "unicron_s", "baseline_s"])
+         ["case", "method", "unicron_s", "unicron_ns_per_op",
+          "baseline_s"])
     return rows

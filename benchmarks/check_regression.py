@@ -46,8 +46,11 @@ SPECS = {
         "min_workers": 1024,
     },
     "cluster_sim": {
-        "keys": ("config", "policy"),
-        "higher": ("suite_speedup",),
+        # engine axis: "vector" rows carry the vector-vs-scalar suite
+        # speedup, "batched" rows the batched-vs-vector (shared planner
+        # state) speedup and the batched per-policy waf_mean
+        "keys": ("config", "policy", "engine"),
+        "higher": ("suite_speedup", "batched_speedup"),
         "equal": ("waf_mean", "events"),
     },
     "costmodel": {

@@ -26,15 +26,22 @@ def _fmt(v) -> str:
     return str(v)
 
 
-def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call."""
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+           number: int = 1) -> float:
+    """Median wall seconds per call.
+
+    ``number``: calls per timed sample (timeit-style inner loop) — for
+    ns-scale hot paths a single call is all clock noise, so batch >= 10k
+    calls per sample and report the per-call average of the median
+    sample."""
     for _ in range(warmup):
         fn(*args)
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn(*args)
-        ts.append(time.perf_counter() - t0)
+        for _ in range(number):
+            fn(*args)
+        ts.append((time.perf_counter() - t0) / number)
     ts.sort()
     return ts[len(ts) // 2]
 

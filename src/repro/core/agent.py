@@ -41,6 +41,7 @@ class UnicronAgent:
         self.monitors = [GPUMonitor(g) for g in range(n_gpus)]
         self.stat_monitor = OnlineStatMonitor()
         self.alive = True
+        self._launch_seq = 0
 
     # ---- heartbeat / node health -------------------------------------------
 
@@ -90,6 +91,40 @@ class UnicronAgent:
                   "visible_at": now}
         self.kv.put(f"/tasks/finished/{now:.3f}/{self.node_id}", record,
                     now=now)
+        return record
+
+    # ---- task launch admission (Figure 7 trigger 6) ----------------------
+
+    def request_task_launch(self, task, now: float, epoch: int,
+                            avg_iter_s: float = 30.0) -> Dict:
+        """Announce through the status monitor that a new task asks to be
+        admitted to the cluster (Figure 7 trigger 6) — the agent-side
+        counterpart of ``report_task_finished`` that closes the ROADMAP
+        churn gap: launches previously only entered through the
+        scenario/driver side.  Worker counts are NOT part of the request:
+        admission sizing is the planner's decision (the coordinator
+        replans the whole cluster around the new task).
+
+        ``epoch`` MUST be the plan epoch the requester computed its
+        admission request against: the control loop drops requests whose
+        epoch predates a task-set change (the same staleness guard as
+        finish reports — a request sized against a stale plan state is
+        re-announced by its submitter against the new epoch).  Multiple
+        nodes may announce the same launch; the control loop deduplicates
+        per task per tick before firing ``task_launched``."""
+        self._launch_seq += 1
+        record = {"node": self.node_id, "task": task,
+                  "epoch": int(epoch), "avg_iter_s": float(avg_iter_s),
+                  "requested_at": now, "visible_at": now}
+        # Key carries a per-agent sequence (two distinct launches from one
+        # node at the same timestamp must not overwrite each other) and a
+        # zero-padded timestamp: the control loop drains keys in sorted
+        # order, and admission order determines coordinator entry order
+        # and which record wins the per-task dedup, so lexicographic must
+        # equal chronological across digit-width boundaries.
+        self.kv.put(
+            f"/tasks/launch/{now:017.3f}/{self.node_id}/{self._launch_seq}",
+            record, now=now)
         return record
 
     # ---- iteration statistics (online statistical monitoring) -----------

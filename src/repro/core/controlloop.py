@@ -58,6 +58,7 @@ class ControlLoop:
         out += self._expire_heartbeats(now)
         out += self._drain_error_reports(now)
         out += self._drain_task_reports(now)
+        out += self._drain_launch_requests(now)
         out += self._rejoin_repaired(now)
         self.events += out
         return out
@@ -105,6 +106,33 @@ class ControlLoop:
         for idx in sorted(done, reverse=True):
             if 0 <= idx < len(self.coord.entries):
                 out.append(self._task_finished_event(now, idx))
+        return out
+
+    def _drain_launch_requests(self, now: float) -> List[LoopEvent]:
+        """Agent-announced task launches (``/tasks/launch/`` keys): the
+        task_arrival trigger (Figure 7 trigger 6), deduplicated per task
+        per tick and guarded by the same published plan-epoch check as
+        ``task_finished`` — a request computed against a superseded plan
+        state is consumed without firing (its submitter re-announces
+        against the new epoch if the launch still stands)."""
+        epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
+        pending: Dict[object, Dict] = {}
+        for key, rec in sorted(self.kv.prefix("/tasks/launch/").items()):
+            if key in self._seen or rec["visible_at"] > now:
+                continue
+            self._seen.add(key)
+            if rec.get("epoch", epoch) != epoch:
+                continue                       # stale: plan state moved on
+            pending.setdefault(rec["task"], rec)
+        out = []
+        for task, rec in pending.items():
+            plan = self.coord.task_launched(
+                task, self.cluster.healthy_workers(),
+                avg_iter_s=rec.get("avg_iter_s", 30.0))
+            self.cluster.assign(list(plan.assignment))
+            out.append(LoopEvent(now, rec["node"], None, Action.RESUME,
+                                 plan.assignment,
+                                 self.coord.plan_stats.last_dispatch_s))
         return out
 
     def _rejoin_repaired(self, now: float) -> List[LoopEvent]:

@@ -85,10 +85,20 @@ class UnicronCoordinator:
         self.open_cases: Dict[str, FailureCase] = {}
         self._table: Optional[PlanTable] = None
         self.plan_cache = plan_cache
+        self._tids: Optional[Tuple[int, ...]] = None   # interned task ids
+        self._intern_tasks()
         self.plan_stats = PlanStats()
         self.plan_epoch = 0
         self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
         self.refresh_plan_table()
+
+    def _intern_tasks(self) -> None:
+        """Re-intern the task set in the shared plan cache (churn only):
+        per-event table refreshes then reuse the tuple instead of hashing
+        every task object again."""
+        if self.plan_cache is not None:
+            self._tids = tuple(self.plan_cache.task_id(e.task)
+                               for e in self.entries)
 
     def _bump_epoch(self) -> None:
         """The task set changed: indices in in-flight churn reports are
@@ -128,7 +138,8 @@ class UnicronCoordinator:
                                                 d_run, self.d_transition,
                                                 workers_per_fault=w,
                                                 n_budget=n_budget,
-                                                engine=self.plan_engine)
+                                                engine=self.plan_engine,
+                                                task_ids=self._tids)
         else:
             self._table = PlanTable(tasks, assignment, self.hw, d_run,
                                     self.d_transition,
@@ -224,6 +235,7 @@ class UnicronCoordinator:
                 plan = cand
                 self.plan_stats.lookup_hits += 1
         self.entries.pop(task_index)
+        self._intern_tasks()
         self._bump_epoch()
         if plan is None:
             plan = self._fresh_plan(n_workers_now)
@@ -242,6 +254,7 @@ class UnicronCoordinator:
         self.entries.append(TaskEntry(task=task, n_workers=0,
                                       avg_iter_s=avg_iter_s,
                                       state_bytes=16.0 * task.model.n_params))
+        self._intern_tasks()
         self._bump_epoch()
         t0 = time.perf_counter()
         plan = self._fresh_plan(n_workers_now)

@@ -1,13 +1,21 @@
 """In-band error detection (§4.1) — four methods, severity levels (Table 1),
 and the online statistical monitor with the 3x-average failure threshold
 and 1.1x degradation margin (Figure 6).
+
+Scalar entry points (``detection_time``, ``OnlineStatMonitor``) are the
+reference semantics; the array-native counterparts (``detection_times``,
+``FleetMonitor``) vectorize the Table-1/Table-2 lookup over
+(kinds x policies) and the per-task iteration history over a whole fleet,
+which is what the batched multi-policy simulator consumes.
 """
 from __future__ import annotations
 
 import enum
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Optional, Tuple
+from typing import Deque, Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 class Severity(enum.IntEnum):
@@ -93,6 +101,48 @@ def detection_time(kind: ErrorKind, avg_iter_s: float,
     }[method]
 
 
+# ---------------------------------------------------------------------------
+# Array-native detection model: the Table-1/Table-2 lookup vectorized over
+# (kinds x policies).  Same floats as ``detection_time`` at every cell.
+# ---------------------------------------------------------------------------
+
+_KINDS: Tuple[ErrorKind, ...] = tuple(ErrorKind)
+KIND_INDEX: Dict[ErrorKind, int] = {k: i for i, k in enumerate(_KINDS)}
+_METHODS: Tuple[Method, ...] = (Method.NODE_HEALTH, Method.PROCESS,
+                                Method.EXCEPTION, Method.STATISTICAL)
+_METHOD_INDEX = {m: i for i, m in enumerate(_METHODS)}
+_STAT_CODE = _METHOD_INDEX[Method.STATISTICAL]
+# per-kind method code and severity int, indexable by KIND_INDEX
+KIND_METHOD = np.array([_METHOD_INDEX[ERROR_TABLE[k][0]] for k in _KINDS])
+KIND_SEVERITY = np.array([int(ERROR_TABLE[k][1]) for k in _KINDS])
+# per-method fixed latencies; the statistical entry is a placeholder (its
+# latency scales with the average iteration time, filled in per query)
+_UNICRON_BY_METHOD = np.array([HEARTBEAT_DETECT_S, PROCESS_DETECT_S,
+                               EXCEPTION_DETECT_S, 0.0])
+_BASELINE_BY_METHOD = np.array([BASELINE_HEARTBEAT_S, BASELINE_TIMEOUT_S,
+                                BASELINE_TIMEOUT_S, BASELINE_TIMEOUT_S])
+
+
+def detection_times(kinds: Sequence[ErrorKind], avg_iter_s,
+                    unicron) -> np.ndarray:
+    """Detection latencies for every (kind, policy) pair as one
+    (len(kinds), len(unicron)) matrix (Table 2 vectorized).
+
+    ``unicron`` is a boolean vector over the policy axis (True = in-band
+    Unicron detection); ``avg_iter_s`` is a scalar or broadcastable to
+    (len(kinds), len(unicron)) — statistical detection is
+    ``STAT_MULTIPLIER * avg_iter_s`` per cell, exactly the scalar
+    ``detection_time`` arithmetic, so every cell equals the scalar call."""
+    ki = np.array([KIND_INDEX[k] for k in kinds])
+    uni = np.asarray(unicron, dtype=bool)
+    method = KIND_METHOD[ki][:, None]                      # (K, 1)
+    avg = np.broadcast_to(np.asarray(avg_iter_s, dtype=float),
+                          (ki.size, uni.size))
+    uni_t = np.where(method == _STAT_CODE, STAT_MULTIPLIER * avg,
+                     _UNICRON_BY_METHOD[method])
+    return np.where(uni[None, :], uni_t, _BASELINE_BY_METHOD[method])
+
+
 @dataclass
 class OnlineStatMonitor:
     """Rolling-average iteration monitor (Fig. 6).
@@ -137,3 +187,77 @@ class OnlineStatMonitor:
         if waited_s > DEGRADE_MARGIN * avg:
             return "degraded"
         return "ok"
+
+
+class FleetMonitor:
+    """Array-native §4.1 statistical monitor: one (tasks, window) float
+    ring buffer replacing per-task ``OnlineStatMonitor`` deques inside the
+    simulation engines.
+
+    Rows hold the rolling iteration history of one task each; ``observe``
+    is a vectorized scatter, ``averages``/``statuses`` are masked row
+    reductions.  A row primed with a constant history reports exactly the
+    scalar monitor's average (the window is a power of two, so the mean of
+    identical values is exact), which is the only regime the engines
+    consult — ``OnlineStatMonitor`` stays the scalar reference the
+    property tests compare against."""
+
+    def __init__(self, n_tasks: int, window: int = 64):
+        self.window = window
+        self._buf = np.zeros((n_tasks, window))
+        self._pos = np.zeros(n_tasks, dtype=np.int64)
+        self._count = np.zeros(n_tasks, dtype=np.int64)
+
+    @classmethod
+    def primed(cls, avg_iter_s: Sequence[float],
+               window: int = 64) -> "FleetMonitor":
+        """One row per task, each warmed with a full window of its
+        steady-state iteration time (``OnlineStatMonitor.primed`` for a
+        whole fleet)."""
+        avg = np.asarray(avg_iter_s, dtype=float)
+        mon = cls(avg.size, window=window)
+        mon._buf[:] = avg[:, None]
+        mon._count[:] = window
+        return mon
+
+    @property
+    def n_tasks(self) -> int:
+        return self._buf.shape[0]
+
+    def grow(self, avg_iter_s: float) -> int:
+        """Admit one task (churn): returns its row index, primed."""
+        row = np.full((1, self.window), float(avg_iter_s))
+        self._buf = np.concatenate([self._buf, row])
+        self._pos = np.concatenate([self._pos, np.zeros(1, dtype=np.int64)])
+        self._count = np.concatenate([self._count,
+                                      np.full(1, self.window,
+                                              dtype=np.int64)])
+        return self.n_tasks - 1
+
+    def observe(self, tasks: Sequence[int], iter_s) -> None:
+        """Record one completed iteration per task (vectorized scatter)."""
+        ti = np.asarray(tasks, dtype=np.int64)
+        self._buf[ti, self._pos[ti]] = np.asarray(iter_s, dtype=float)
+        self._pos[ti] = (self._pos[ti] + 1) % self.window
+        self._count[ti] = np.minimum(self._count[ti] + 1, self.window)
+
+    def averages(self, tasks: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Rolling averages per task; NaN where a row has no history."""
+        ti = (np.arange(self.n_tasks) if tasks is None
+              else np.asarray(tasks, dtype=np.int64))
+        count = self._count[ti]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(count > 0,
+                            self._buf[ti].sum(axis=1) / count, np.nan)
+
+    def statuses(self, tasks: Sequence[int], waited_s) -> np.ndarray:
+        """Status codes per (task, waited) pair: 0 ok / 1 degraded /
+        2 failed — the Fig. 6 thresholds, vectorized."""
+        avg = self.averages(tasks)
+        waited = np.broadcast_to(np.asarray(waited_s, dtype=float),
+                                 avg.shape)
+        out = np.zeros(avg.shape, dtype=np.int64)
+        with np.errstate(invalid="ignore"):
+            out[waited > DEGRADE_MARGIN * avg] = 1
+            out[waited > STAT_MULTIPLIER * avg] = 2
+        return out

@@ -907,10 +907,16 @@ class PlannerCache:
               hw: Hardware, d_running: float, d_transition: float,
               workers_per_fault: int = 8,
               n_budget: Optional[int] = None,
-              engine: str = "segtree") -> PlanTable:
-        """A lazy PlanTable for this cluster state, memoized by state."""
+              engine: str = "segtree",
+              task_ids: Optional[Tuple[int, ...]] = None) -> PlanTable:
+        """A lazy PlanTable for this cluster state, memoized by state.
+        ``task_ids``: the already-interned ``task_id`` tuple for ``tasks``
+        (callers that refresh per event keep it across rebuilds — the
+        task set only changes on churn)."""
         tasks, assignment = tuple(tasks), tuple(assignment)
-        key = (tuple(self.task_id(t) for t in tasks), assignment, hw,
+        if task_ids is None:
+            task_ids = tuple(self.task_id(t) for t in tasks)
+        key = (task_ids, assignment, hw,
                d_running, d_transition, workers_per_fault, n_budget,
                engine)
         return self._memo(

@@ -61,6 +61,7 @@ class TaskArrival:
     time: float
     task: Task
     workers_hint: int = 0      # baseline policies grant min(hint, free)
+    avg_iter_s: float = 30.0   # steady-state iteration time hint
 
 
 @dataclass(frozen=True)

@@ -22,17 +22,32 @@ Inputs are either a plain failure trace (``core.traces``) or a
 degradation (§4.1 statistical monitor), correlated/preemption failures,
 and task join/finish churn (Figure 7 triggers 5/6).
 
-Two integrators share one decision engine:
+Three integrators share one decision engine:
 
 * ``TraceSimulator`` — the scalar reference loop: per-event Python with
   piecewise-midpoint WAF integration and the eager, uncached coordinator.
-* ``VectorSimulator`` — the cluster-scale engine: identical decisions
-  (same handlers, plans float-identical via the lazy cached planner), but
-  WAF is integrated as one numpy segment product and plan tables are
-  chain-cached across rebuilds and Monte-Carlo seeds
-  (``planner.PlannerCache``).  ``run_monte_carlo`` batches seeds over a
-  shared cache; ``benchmarks/bench_cluster_sim.py`` asserts the >= 50x
-  engine speedup and 1e-6 WAF agreement at (n=1024, m=32).
+  One policy per run; the ground truth every other engine must match.
+* ``VectorSimulator`` — the per-(policy, seed) cluster-scale engine:
+  identical decisions (same handlers, plans float-identical via the lazy
+  cached planner), but WAF is integrated as one numpy segment product and
+  plan tables are chain-cached across rebuilds and Monte-Carlo seeds
+  (``planner.PlannerCache``).  Still one policy per run — the measured
+  baseline of the batched engine.
+* ``BatchSimulator`` — the batched multi-policy engine: one event pass
+  per trace carrying EVERY recovery policy as stacked numpy state
+  (per-policy worker/blocked/placement matrices, downtime vectors, WAF
+  accumulators).  Each event is decoded once; its per-policy consequences
+  are one array op over the policy axis through the array-native models
+  (``detection.detection_times``, ``transition.estimate_batch``,
+  ``detection.FleetMonitor``), while planner-backed lanes drive the same
+  ``UnicronCoordinator`` the scalar loop uses, so plans stay identical.
+
+``run_monte_carlo(engine=...)`` batches seeds over a shared cache:
+``"batched"`` (default) runs each seed once through ``BatchSimulator``;
+``"vector"`` keeps the PR-2/3 per-(policy, seed) path as the measured
+baseline.  ``benchmarks/bench_cluster_sim.py`` asserts the >= 50x
+vector-vs-scalar and >= 3x batched-vs-vector engine speedups and 1e-6
+WAF agreement at (n=1024, m=32).
 
 WAF is integrated over the trace (the Fig. 11 y-axis); ``accumulated``
 at the end of the run is the Fig. 11b/d number.
@@ -41,6 +56,7 @@ from __future__ import annotations
 
 import heapq
 import time as _time
+from bisect import bisect_left, bisect_right
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
@@ -50,8 +66,8 @@ import numpy as np
 from repro.core import costmodel, transition, waf as waf_mod
 from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
-from repro.core.detection import (ErrorKind, OnlineStatMonitor, Severity,
-                                  detection_time)
+from repro.core.detection import (ErrorKind, FleetMonitor, Severity,
+                                  classify, detection_time, detection_times)
 from repro.core.handling import Trigger
 from repro.core.planner import PlannerCache
 from repro.core.scenarios import (ClusterScenario, DegradationEvent,
@@ -112,6 +128,197 @@ class MonteCarloResult:
     downtime_s: float
 
 
+# ---------------------------------------------------------------------------
+# Shared event normalization + segment integration (all engines)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_trace_span(trace: Trace, span_s: Optional[float]) -> float:
+    if span_s is not None:
+        return span_s
+    if isinstance(trace, ClusterScenario):
+        return trace.span_s
+    return trace_span(trace)
+
+
+def _check_trace_shape(trace: Trace, n_nodes: int, gpn: int) -> None:
+    if isinstance(trace, ClusterScenario):
+        assert (trace.n_nodes, trace.gpus_per_node) == (n_nodes, gpn), (
+            f"scenario shaped for {trace.n_nodes}x"
+            f"{trace.gpus_per_node}, simulator is {n_nodes}x{gpn}")
+
+
+def _event_entries(trace: Trace,
+                   span: float) -> Tuple[List[Tuple[float, int, str, object]],
+                                         int]:
+    """(time, seq, kind, payload) entries + next seq: failure/repair first
+    (preserving the historical same-time ordering), then degradations and
+    churn; handlers may push synthetic events past these."""
+    if isinstance(trace, ClusterScenario):
+        failures, degradations, churn = (trace.failures,
+                                         trace.degradations, trace.churn)
+    else:
+        failures, degradations, churn = trace, [], []
+    entries: List[Tuple[float, int, str, object]] = []
+    seq = 0
+    for e in failures:
+        if e.time <= span:
+            entries.append((e.time, seq, "fail", e))
+            seq += 1
+    for e in failures:
+        if e.repair_s is not None and e.time + e.repair_s <= span:
+            entries.append((e.time + e.repair_s, seq, "repair", e))
+            seq += 1
+    for d in degradations:
+        if d.time <= span:
+            entries.append((d.time, seq, "degrade", d))
+            seq += 1
+    for c in churn:
+        if c.time <= span:
+            kind = "arrive" if isinstance(c, TaskArrival) else "finish"
+            entries.append((c.time, seq, kind, c))
+            seq += 1
+    return entries, seq
+
+
+def _integrate_segments(snap_t: List[float], snap_w: List[List[int]],
+                        blocks: List[Tuple[int, float, float]],
+                        slows: List[List[Tuple[float, float, float]]],
+                        span: float, F: np.ndarray):
+    """One numpy pass over one policy's recorded step functions: segment
+    boundaries from events + block expiries + slow-window edges; rates are
+    a gather out of the eff-scaled (m, n+1) WAF matrix ``F``, masked by
+    blocks, divided by slow factors.  Returns (accumulated, timeline)."""
+    m = F.shape[0]
+    edges = {0.0, span}
+    edges.update(t for t in snap_t if 0.0 < t < span)
+    for _, start, until in blocks:
+        if start < span:
+            edges.add(max(start, 0.0))
+            if until < span:
+                edges.add(until)
+    for wins in slows:
+        for start, end, _ in wins:
+            if 0.0 < start < span:
+                edges.add(start)
+            if 0.0 < end < span:
+                edges.add(end)
+    bounds = np.array(sorted(edges))
+    dt = np.diff(bounds)
+    # per-segment worker counts: latest snapshot at or before seg start
+    st_arr = np.array(snap_t)
+    idx = np.searchsorted(st_arr, bounds[:-1], side="right") - 1
+    W = np.zeros((len(snap_t), m), dtype=np.int64)
+    for r, w in enumerate(snap_w):
+        W[r, :len(w)] = w
+    Wseg = W[idx]                                   # (S, m)
+    rate = F[np.arange(m)[None, :], Wseg]           # (S, m)
+    scale = np.ones_like(rate)
+    for slot, start, until in blocks:
+        if start >= span:
+            continue
+        lo = np.searchsorted(bounds, start, side="left")
+        hi = np.searchsorted(bounds, min(until, span), side="left")
+        scale[lo:hi, slot] = 0.0
+    for slot, wins in enumerate(slows):
+        for start, end, factor in wins:
+            if start >= span:
+                continue
+            lo = np.searchsorted(bounds, max(start, 0.0), side="left")
+            hi = np.searchsorted(bounds, min(end, span), side="left")
+            seg = scale[lo:hi, slot]
+            np.minimum(seg, 1.0 / factor,
+                       where=seg > 0.0, out=seg)
+    eff_rate = rate * scale
+    acc = float(eff_rate @ np.ones(m) @ dt) if m else 0.0
+    row = eff_rate.sum(axis=1) if m else np.zeros(len(dt))
+    # timeline samples at event boundaries (rate of the segment that
+    # starts there), matching the reference loop's post-event samples
+    timeline = [(0.0, float(row[0]) if len(row) else 0.0)]
+    for t in snap_t[1:]:
+        si = min(np.searchsorted(bounds, t, side="left"), len(row) - 1)
+        timeline.append((t, float(row[si])))
+    timeline.append((span, float(row[-1]) if len(row) else 0.0))
+    return acc, timeline
+
+
+def _integrate_policies(snap_t: List[float], snaps: List[np.ndarray],
+                        blocks, slows, span: float, F: np.ndarray,
+                        effs: np.ndarray,
+                        timeline_t: Optional[List[float]] = None):
+    """The multi-policy counterpart of ``_integrate_segments``: one shared
+    edge set (the union of every policy's breakpoints — extra edges only
+    split constant segments, so totals agree with the per-policy pass to
+    float reordering), one (S, P, m) gather, per-policy block/slow masks.
+    ``blocks[p]`` is a (slots, starts, untils) triple of parallel lists.
+    Returns (accs (P,), timelines per policy)."""
+    P, m = effs.size, F.shape[0]
+    st_arr = np.array(snap_t)
+    parts = [st_arr, np.array((0.0, span))]
+    barrs = []
+    for p in range(P):
+        bslots, bstarts, buntils = blocks[p]
+        sl = np.array(bslots, dtype=np.int64)
+        st = np.array(bstarts)
+        un = np.array(buntils)
+        barrs.append((sl, st, un))
+        if sl.size:
+            parts.append(np.maximum(st, 0.0))
+            parts.append(un[un < span])
+        for slot, wins in enumerate(slows[p]):
+            for start, end, _ in wins:
+                parts.append(np.array((max(start, 0.0), min(end, span))))
+    bounds = np.unique(np.concatenate(parts))
+    bounds = bounds[(bounds >= 0.0) & (bounds <= span)]
+    dt = np.diff(bounds)
+    idx = np.searchsorted(st_arr, bounds[:-1], side="right") - 1
+    W = np.zeros((len(snap_t), P, m), dtype=np.int64)
+    for r, w in enumerate(snaps):
+        W[r, :, :w.shape[1]] = w
+    Wseg = W[idx]                                   # (S, P, m)
+    rate = F[np.arange(m)[None, None, :], Wseg] * effs[None, :, None]
+    scale = np.ones_like(rate)
+    for p in range(P):
+        sl, st, un = barrs[p]
+        if sl.size:
+            lo_a = np.searchsorted(bounds, st, side="left")
+            hi_a = np.searchsorted(bounds, np.minimum(un, span),
+                                   side="left")
+            live = st < span
+            for slot, lo, hi in zip(sl[live].tolist(), lo_a[live].tolist(),
+                                    hi_a[live].tolist()):
+                scale[lo:hi, p, slot] = 0.0
+        for slot, wins in enumerate(slows[p]):
+            for start, end, factor in wins:
+                if start >= span:
+                    continue
+                lo = np.searchsorted(bounds, max(start, 0.0), side="left")
+                hi = np.searchsorted(bounds, min(end, span), side="left")
+                seg = scale[lo:hi, p, slot]
+                np.minimum(seg, 1.0 / factor,
+                           where=seg > 0.0, out=seg)
+    rate *= scale
+    rows = rate.sum(axis=2)                         # (S, P)
+    accs = rows.T @ dt if m else np.zeros(P)
+    # timeline samples at event times (the rate of the segment holding or
+    # starting at each sample), shared across policies
+    samples = snap_t[1:] if timeline_t is None else timeline_t
+    sis = (np.clip(np.searchsorted(bounds, samples, side="right") - 1,
+                   0, len(dt) - 1)
+           if len(dt) else np.zeros(0, dtype=int))
+    timelines = []
+    for p in range(P):
+        row = rows[:, p]
+        first = float(row[0]) if len(row) else 0.0
+        last = float(row[-1]) if len(row) else 0.0
+        timeline = [(0.0, first)]
+        timeline += [(t, float(row[si]))
+                     for t, si in zip(samples, sis)]
+        timeline.append((span, last))
+        timelines.append(timeline)
+    return accs, timelines
+
+
 class TraceSimulator:
     """Scalar reference loop: per-event Python decisions + piecewise
     midpoint WAF integration (the baseline the vectorized engine must
@@ -143,6 +350,10 @@ class TraceSimulator:
         self.gpn = gpus_per_node
         self.tasks = [SimTask(task=t, workers=x)
                       for t, x in zip(tasks, assignment)]
+        # §4.1 statistical monitor: one primed ring-buffer row per task
+        # (replaces the per-event OnlineStatMonitor deques; same status)
+        self._fleet = FleetMonitor.primed([t.avg_iter_s
+                                           for t in self.tasks])
         self.cluster.assign([t.workers for t in self.tasks])
         self.coord: Optional[UnicronCoordinator] = None
         if policy == "unicron":
@@ -278,34 +489,9 @@ class TraceSimulator:
 
     def _event_heap(self, trace: Trace,
                     span: float) -> List[Tuple[float, int, str, object]]:
-        """(time, seq, kind, payload) heap: failure/repair entries first
-        (preserving the historical same-time ordering), then degradations
-        and churn; handlers may push synthetic events via ``_push``."""
-        if isinstance(trace, ClusterScenario):
-            failures, degradations, churn = (trace.failures,
-                                             trace.degradations, trace.churn)
-        else:
-            failures, degradations, churn = trace, [], []
-        entries: List[Tuple[float, int, str, object]] = []
-        seq = 0
-        for e in failures:
-            if e.time <= span:
-                entries.append((e.time, seq, "fail", e))
-                seq += 1
-        for e in failures:
-            if e.repair_s is not None and e.time + e.repair_s <= span:
-                entries.append((e.time + e.repair_s, seq, "repair", e))
-                seq += 1
-        for d in degradations:
-            if d.time <= span:
-                entries.append((d.time, seq, "degrade", d))
-                seq += 1
-        for c in churn:
-            if c.time <= span:
-                kind = "arrive" if isinstance(c, TaskArrival) else "finish"
-                entries.append((c.time, seq, kind, c))
-                seq += 1
-        self._seq = seq
+        """(time, seq, kind, payload) heap (``_event_entries``); handlers
+        may push synthetic events via ``_push``."""
+        entries, self._seq = _event_entries(trace, span)
         heapq.heapify(entries)
         return entries
 
@@ -330,19 +516,10 @@ class TraceSimulator:
 
     def _resolve_span(self, trace: Trace,
                       span_s: Optional[float]) -> float:
-        if span_s is not None:
-            return span_s
-        if isinstance(trace, ClusterScenario):
-            return trace.span_s
-        return trace_span(trace)
+        return _resolve_trace_span(trace, span_s)
 
     def _check_shape(self, trace: Trace) -> None:
-        if isinstance(trace, ClusterScenario):
-            assert (trace.n_nodes, trace.gpus_per_node) == \
-                (len(self.cluster.nodes), self.gpn), (
-                    f"scenario shaped for {trace.n_nodes}x"
-                    f"{trace.gpus_per_node}, simulator is "
-                    f"{len(self.cluster.nodes)}x{self.gpn}")
+        _check_trace_shape(trace, len(self.cluster.nodes), self.gpn)
 
     def run(self, trace: Trace, span_s: Optional[float] = None) -> SimResult:
         self._check_shape(trace)
@@ -435,10 +612,10 @@ class TraceSimulator:
         if owner is None or not self.tasks[owner].active:
             return
         st = self.tasks[owner]
-        monitor = OnlineStatMonitor.primed(st.avg_iter_s)
-        status = monitor.status(ev.slowdown * st.avg_iter_s)
+        flagged = int(self._fleet.statuses([owner],
+                                           ev.slowdown * st.avg_iter_s)[0])
         in_band = self.policy == "unicron" and not self.ablate_detection
-        if in_band and status != "ok":
+        if in_band and flagged:
             if self.coord is not None:
                 case = f"degrade:{node}:{now}"
                 self.coord.on_error(case, ErrorKind.TASK_HANG)
@@ -460,8 +637,10 @@ class TraceSimulator:
             st.slow.append((now, now + ev.duration_s, ev.slowdown))
 
     def _on_arrival(self, now: float, ev: TaskArrival) -> None:
-        st = SimTask(task=ev.task, workers=0)
+        st = SimTask(task=ev.task, workers=0,
+                     avg_iter_s=getattr(ev, "avg_iter_s", 30.0))
         self.tasks.append(st)
+        self._fleet.grow(st.avg_iter_s)
         if self._use_planner():
             self.coord.task_launched(ev.task,
                                      self.cluster.healthy_workers())
@@ -542,12 +721,21 @@ class VectorSimulator(TraceSimulator):
         while heap:
             t, _, kind, ev = heapq.heappop(heap)
             before = [st.blocked_until for st in self.tasks]
+            was_active = ([st.active for st in self.tasks]
+                          if kind == "finish" else None)
             self._dispatch(t, kind, ev)
             n_events += 1
             for slot, prev in enumerate(before):
                 if self.tasks[slot].blocked_until > prev:
                     blocks.append((slot, t,
                                    self.tasks[slot].blocked_until))
+            if was_active is not None:
+                # a finished task produces no WAF ever again, even if a
+                # later baseline rejoin hands its slot idle workers (the
+                # scalar loop skips inactive tasks at sampling time)
+                for slot, prev in enumerate(was_active):
+                    if prev and not self.tasks[slot].active:
+                        blocks.append((slot, t, float("inf")))
             snap_t.append(t)
             snap_w.append([st.workers for st in self.tasks])
         acc, timeline = self._integrate_vector(snap_t, snap_w, blocks, span)
@@ -561,59 +749,540 @@ class VectorSimulator(TraceSimulator):
         """One numpy pass: segment boundaries from events + block expiries
         + slow-window edges; per-segment rates are a gather out of the
         (m, n+1) WAF matrix, masked by blocks, divided by slow factors."""
-        m = len(self.tasks)
-        edges = {0.0, span}
-        edges.update(t for t in snap_t if 0.0 < t < span)
-        for _, start, until in blocks:
-            if start < span:
-                edges.add(max(start, 0.0))
-                if until < span:
-                    edges.add(until)
-        for st in self.tasks:
-            for start, end, _ in st.slow:
-                if 0.0 < start < span:
-                    edges.add(start)
-                if 0.0 < end < span:
-                    edges.add(end)
-        bounds = np.array(sorted(edges))
-        dt = np.diff(bounds)
-        # per-segment worker counts: latest snapshot at or before seg start
-        st_arr = np.array(snap_t)
-        idx = np.searchsorted(st_arr, bounds[:-1], side="right") - 1
-        W = np.zeros((len(snap_t), m), dtype=np.int64)
-        for r, w in enumerate(snap_w):
-            W[r, :len(w)] = w
-        Wseg = W[idx]                                   # (S, m)
         F = waf_mod.waf_matrix([st.task for st in self.tasks],
                                self._n_total, self.hw) * self.eff
-        rate = F[np.arange(m)[None, :], Wseg]           # (S, m)
-        scale = np.ones_like(rate)
-        for slot, start, until in blocks:
-            if start >= span:
+        return _integrate_segments(snap_t, snap_w, blocks,
+                                   [st.slow for st in self.tasks], span, F)
+
+
+class BatchSimulator:
+    """Batched multi-policy engine: ONE event pass per trace carrying every
+    recovery policy as stacked numpy state.
+
+    Per-policy worker matrices, downtime vectors, blocked-until windows,
+    spare pools, node-health/placement maps and WAF accumulators advance
+    together: each event is decoded once, detection latencies come from
+    the (kinds x policies) ``detection.detection_times`` lookup, transition
+    durations from the (policy x component) ``transition.estimate_batch``
+    matrix, slow-node checks from the ``detection.FleetMonitor`` ring
+    buffer, and consequences land as array ops over the policy axis.
+    Planner-backed lanes (``"unicron"``) drive the same lazily-cached
+    ``UnicronCoordinator`` call sequence as the scalar reference loop, so
+    plans — and therefore per-policy decisions — are identical to a
+    per-policy ``TraceSimulator``/``VectorSimulator`` run; accumulated WAF
+    agrees to float reordering (~1e-12; the benchmark asserts 1e-6).
+
+    Component ablations stay on the per-policy engines — a lane here is a
+    published policy, not an ablation variant."""
+
+    def __init__(self, tasks: List[Task], assignment: List[int],
+                 policies: Optional[List[str]] = None, hw=costmodel.A800,
+                 n_nodes: int = 16, gpus_per_node: int = 8, *,
+                 plan_cache: Optional[PlannerCache] = None,
+                 model_cache: Optional[Dict] = None):
+        """``model_cache``: share memoized detection/transition model rows
+        across simulators (``run_monte_carlo`` passes one per sweep) —
+        entries are keyed by task identity, kind and DP degree, so they
+        are scenario-independent."""
+        self.policies = list(policies or EFFICIENCY)
+        P = len(self.policies)
+        self.hw = hw
+        self.n_nodes = n_nodes
+        self.gpn = gpus_per_node
+        self._n_total = n_nodes * gpus_per_node
+        self._effs = np.array([EFFICIENCY[p] for p in self.policies])
+        self._planner_lane = np.array([p == "unicron"
+                                       for p in self.policies])
+        self._planner_idx = [p for p, pol in enumerate(self.policies)
+                             if pol == "unicron"]
+        self._bamboo_lane = np.array([p == "bamboo"
+                                      for p in self.policies])
+        self._ckpt_lane = np.array(
+            [p in transition.CKPT_RESTART_POLICIES for p in self.policies])
+        self._has_spares = [p in HOT_SPARES for p in self.policies]
+        self._spares = [HOT_SPARES.get(p, 0) for p in self.policies]
+        self._tasks: List[Task] = list(tasks)
+        M = len(self._tasks)
+        self._avg = np.full(M, 30.0)              # SimTask.avg_iter_s
+        self._sbytes = np.array([16.0 * t.model.n_params
+                                 for t in self._tasks])
+        self._workers = np.tile(np.asarray(assignment, dtype=np.int64),
+                                (P, 1))
+        self._blocked = [[0.0] * M for _ in range(P)]
+        self._active = np.ones(M, dtype=bool)
+        self._affected = np.zeros((P, M), dtype=bool)
+        self._health = np.ones((P, n_nodes), dtype=bool)
+        self._slows = [[[] for _ in range(M)] for _ in range(P)]
+        # per lane: parallel (slots, starts, untils) lists of block windows
+        self._blocks = [([], [], []) for _ in range(P)]
+        self.n_reconfigs = np.zeros(P, dtype=np.int64)
+        self._downtime = [0.0] * P
+        self.n_degraded_drains = np.zeros(P, dtype=np.int64)
+        self.n_events = np.zeros(P, dtype=np.int64)
+        self._fleet = FleetMonitor.primed(self._avg)
+        self._coords: Dict[int, UnicronCoordinator] = {}
+        self._cis: Dict[int, List[Optional[int]]] = {}
+        cache = plan_cache
+        for p, pol in enumerate(self.policies):
+            if pol != "unicron":
                 continue
-            lo = np.searchsorted(bounds, start, side="left")
-            hi = np.searchsorted(bounds, min(until, span), side="left")
-            scale[lo:hi, slot] = 0.0
-        for slot, st in enumerate(self.tasks):
-            for start, end, factor in st.slow:
-                if start >= span:
-                    continue
-                lo = np.searchsorted(bounds, max(start, 0.0), side="left")
-                hi = np.searchsorted(bounds, min(end, span), side="left")
-                seg = scale[lo:hi, slot]
-                np.minimum(seg, 1.0 / factor,
-                           where=seg > 0.0, out=seg)
-        eff_rate = rate * scale
-        acc = float(eff_rate @ np.ones(m) @ dt) if m else 0.0
-        row = eff_rate.sum(axis=1) if m else np.zeros(len(dt))
-        # timeline samples at event boundaries (rate of the segment that
-        # starts there), matching the reference loop's post-event samples
-        timeline = [(0.0, float(row[0]) if len(row) else 0.0)]
-        for t in snap_t[1:]:
-            si = min(np.searchsorted(bounds, t, side="left"), len(row) - 1)
-            timeline.append((t, float(row[si])))
-        timeline.append((span, float(row[-1]) if len(row) else 0.0))
-        return acc, timeline
+            if cache is None:
+                cache = PlannerCache()
+            self._coords[p] = UnicronCoordinator(
+                list(tasks), list(assignment), hw, plan_cache=cache,
+                n_cluster_workers=self._n_total,
+                workers_per_node=gpus_per_node)
+            self._cis[p] = list(range(M))
+        P_range = list(range(P))
+        self._all_list = P_range
+        self._all_lanes = np.ones(P, dtype=bool)
+        self._n_healthy = [n_nodes] * P          # healthy-node counters
+        self._healthy_ids: List[Optional[np.ndarray]] = [None] * P
+        self._cums: List[Optional[np.ndarray]] = [None] * P
+        self._assigned = [int(sum(assignment))] * P
+        self._aff_count = [0] * P
+        self._reconfigs = [0] * P
+        self._kind_T: Dict[ErrorKind, np.ndarray] = {}
+        shared = model_cache if model_cache is not None else {}
+        self._uni_cache = shared.setdefault("uni", {})
+        self._class_cache = shared.setdefault("class", {})
+        # intern tasks once: model-cache keys hash small ints per event,
+        # not task dataclasses (a Task hash cascades through its model)
+        sigs = shared.setdefault("task_ids", {})
+        self._tids = [sigs.setdefault(t, len(sigs)) for t in self._tasks]
+        self._task_sigs = sigs
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self._span = float("inf")
+        self._mutated = False
+
+    # ---- per-lane cluster state -------------------------------------------
+
+    def _healthy_workers(self, p: int) -> int:
+        return self._n_healthy[p] * self.gpn
+
+    def _fail_node(self, p: int, node: int) -> None:
+        if self._health[p, node]:
+            self._health[p, node] = False
+            self._n_healthy[p] -= 1
+            ids = self._healthy_ids[p]
+            if ids is not None:
+                ids.pop(bisect_left(ids, node))
+
+    def _recover_node(self, p: int, node: int) -> None:
+        if not self._health[p, node]:
+            self._health[p, node] = True
+            self._n_healthy[p] += 1
+            ids = self._healthy_ids[p]
+            if ids is not None:
+                ids.insert(bisect_left(ids, node), node)
+
+    def _owner_list(self, node: int) -> List[int]:
+        """Per-policy owner of ``node`` (-1 = free/unhealthy), computed by
+        rank instead of materializing placement maps: ``Cluster.assign``
+        packs tasks in index order onto healthy nodes in id order, so the
+        owner of the node at healthy-rank r is the first task whose
+        cumulative node need exceeds r."""
+        out = []
+        for p in self._all_list:
+            ids = self._healthy_ids[p]
+            if ids is None:
+                ids = self._healthy_ids[p] = \
+                    np.flatnonzero(self._health[p]).tolist()
+            r = bisect_left(ids, node)
+            if r >= len(ids) or ids[r] != node:
+                out.append(-1)                  # unhealthy: no owner
+                continue
+            cums = self._cums[p]
+            if cums is None:
+                acc, cums = 0, []
+                for x in self._workers[p].tolist():
+                    acc += x // self.gpn
+                    cums.append(acc)
+                self._cums[p] = cums
+            if not cums or r >= cums[-1]:
+                out.append(-1)                  # past the assigned span
+            else:
+                out.append(bisect_right(cums, r))
+        return out
+
+    def _apply_plan(self, p: int) -> None:
+        coord, cis = self._coords[p], self._cis[p]
+        w = self._workers[p]
+        entries = coord.entries
+        vals = np.array([-1 if ci is None else entries[ci].n_workers
+                         for ci in cis], dtype=np.int64)
+        upd = vals >= 0
+        w[upd] = vals[upd]
+        self._assigned[p] = int(w.sum())
+        self._cums[p] = None
+        self._mutated = True
+
+    def _reconfigure_lane(self, p: int, faulted: Optional[int]) -> None:
+        n_avail = self._n_healthy[p] * self.gpn
+        self._reconfigs[p] += 1
+        if p in self._coords:
+            ft = self._cis[p][faulted] if faulted is not None else None
+            self._coords[p].reconfigure(n_avail, ft)
+            self._apply_plan(p)
+        elif faulted is not None:
+            # baselines only touch the directly-affected task
+            w = self._workers[p]
+            old = int(w[faulted])
+            grant = max(0, min(old, n_avail - (self._assigned[p] - old)))
+            grant -= grant % self.gpn
+            w[faulted] = grant
+            self._assigned[p] += grant - old
+            self._cums[p] = None
+            self._mutated = True
+            if not self._affected[p, faulted]:
+                self._affected[p, faulted] = True
+                self._aff_count[p] += 1
+
+    def _rejoin_lane(self, p: int) -> None:
+        n_avail = self._n_healthy[p] * self.gpn
+        self._reconfigs[p] += 1
+        if p in self._coords:
+            self._coords[p].reconfigure(n_avail, None,
+                                        trigger=Trigger.NODE_JOIN)
+            self._apply_plan(p)
+        elif self._aff_count[p] and n_avail - self._assigned[p] >= self.gpn:
+            # restore the first-affected task toward its original size
+            aff = self._affected[p]
+            slot = int(aff.argmax())
+            self._workers[p, slot] += self.gpn
+            self._assigned[p] += self.gpn
+            self._cums[p] = None
+            self._mutated = True
+            aff[slot] = False
+            self._aff_count[p] -= 1
+
+    # ---- array-native per-event models ------------------------------------
+
+    def _class_matrix(self, kind: ErrorKind) -> np.ndarray:
+        """(policy, task) transition-total matrix for one error kind,
+        built lazily from one ``estimate_batch`` call per recovery class
+        over the task axis (policies of one class share every formula
+        input except the owner task) and cached per (kind, task) in the
+        shared model cache, so churn only computes the admitted task's
+        column.  Planner-lane rows are placeholders — their totals depend
+        on the live DP degree and are overwritten per event by
+        ``_trans_row``."""
+        T = self._kind_T.get(kind)
+        if T is None:
+            M = len(self._tasks)
+            cache = self._class_cache
+            missing = [i for i in range(M)
+                       if (kind, self._tids[i]) not in cache]
+            if missing:
+                sb = self._sbytes[missing]
+                avg = self._avg[missing]
+                det = detection_times([kind], avg,
+                                      np.zeros(len(missing), dtype=bool))[0]
+                ckpt = transition.batch_total(transition.estimate_batch(
+                    ["megatron"] * len(missing), sb, avg, 1, det))
+                dyn = transition.batch_total(transition.estimate_batch(
+                    ["oobleck"] * len(missing), sb, avg, 1, det))
+                for j, i in enumerate(missing):
+                    cache[(kind, self._tids[i])] = (float(ckpt[j]),
+                                                    float(dyn[j]))
+            vals = [cache[(kind, tid)] for tid in self._tids]
+            ckpt_v = np.array([v[0] for v in vals])
+            dyn_v = np.array([v[1] for v in vals])
+            if classify(kind)[1] is not Severity.SEV1:
+                # bamboo's redundancy rides through SEV2/3 failures
+                dyn_bam = np.zeros(M)
+            else:
+                dyn_bam = dyn_v
+            T = np.where(self._ckpt_lane[:, None], ckpt_v[None, :],
+                         np.where(self._bamboo_lane[:, None],
+                                  dyn_bam[None, :], dyn_v[None, :]))
+            self._kind_T[kind] = T
+        return T
+
+    def _trans_row(self, kind: ErrorKind,
+                   owners: List[int]) -> List[float]:
+        """Detection + transition totals per policy: one gather out of the
+        per-kind (policy, task) class matrix, with planner lanes filled
+        from a (kind, owner, dp)-memoized ``estimate_batch`` row — state
+        sizes and iteration times are fixed per task, so those keys pin
+        every input of the scalar formulas."""
+        T = self._class_matrix(kind)
+        tot = [T[p, o if o >= 0 else 0] for p, o in enumerate(owners)]
+        for p in self._planner_idx:
+            o = owners[p]
+            if o < 0:
+                o = 0
+            dp = int(self._workers[p, o]) // 8
+            # the key carries the slot's iteration time too: the same Task
+            # may be admitted with different avg_iter_s hints, and both
+            # detection and recompute scale with it
+            ukey = (kind, self._tids[o], dp, float(self._avg[o]))
+            val = self._uni_cache.get(ukey)
+            if val is None:
+                det = detection_time(kind, float(self._avg[o]),
+                                     unicron=True)
+                val = transition.estimate_unicron(
+                    float(self._sbytes[o]), float(self._avg[o]),
+                    dp_degree=max(dp, 1), detect_s=det,
+                    lookup_hit=True).total
+                self._uni_cache[ukey] = val
+            tot[p] = val
+        return tot
+
+    def _block_and_charge(self, now: float, lanes: List[int],
+                          owners: List[int],
+                          trans: List[float]) -> None:
+        downtime = self._downtime
+        for p in lanes:
+            slot = owners[p]
+            tr = trans[p]
+            row = self._blocked[p]
+            until = now + tr
+            if until > row[slot]:
+                row[slot] = until
+                bs, bt, bu = self._blocks[p]
+                bs.append(slot)
+                bt.append(now)
+                bu.append(until)
+            downtime[p] += tr
+
+    # ---- event handlers ----------------------------------------------------
+
+    def _on_failure(self, now: float, ev: FailureEvent,
+                    mask: np.ndarray) -> None:
+        node = ev.node % self.n_nodes
+        owners = self._owner_list(node)
+        if -1 in owners:
+            # unplaced node: round-robin over tasks with workers
+            for p in self._all_list:
+                if owners[p] < 0 and mask[p]:
+                    cand = np.flatnonzero(self._workers[p] > 0)
+                    owners[p] = (int(cand[node % cand.size])
+                                 if cand.size else -1)
+        if mask is self._all_lanes:
+            valid = [p for p in self._all_list if owners[p] >= 0]
+        else:
+            valid = [p for p in self._all_list
+                     if mask[p] and owners[p] >= 0]
+        if not valid:
+            return
+        trans = self._trans_row(ev.kind, owners)
+        if ev.severity is Severity.SEV1:
+            # hot spare substitutes: capacity preserved, transition still
+            # paid; everyone else drains the node and replans
+            spares = self._spares
+            for p in valid:
+                if spares[p] > 0:
+                    spares[p] -= 1
+                else:
+                    self._fail_node(p, node)
+                    self._reconfigure_lane(p, owners[p])
+        self._block_and_charge(now, valid, owners, trans)
+
+    def _on_repair(self, now: float, ev: FailureEvent,
+                   mask: np.ndarray) -> None:
+        node = ev.node % self.n_nodes
+        lanes = (self._all_list if mask is self._all_lanes
+                 else np.flatnonzero(mask).tolist())
+        for p in lanes:
+            if self._has_spares[p] and not self._aff_count[p]:
+                # no task was down-scaled: the repaired node refills
+                # the spare pool instead of joining a task
+                self._spares[p] += 1
+                continue
+            self._recover_node(p, node)
+            self._rejoin_lane(p)
+
+    def _on_degradation(self, now: float, ev: DegradationEvent,
+                        mask: np.ndarray) -> None:
+        node = ev.node % self.n_nodes
+        owners = self._owner_list(node)
+        valid = [p for p in self._all_list
+                 if mask[p] and owners[p] >= 0 and self._active[owners[p]]]
+        if not valid:
+            return
+        o_arr = np.array([owners[p] for p in valid])
+        codes = self._fleet.statuses(o_arr, ev.slowdown * self._avg[o_arr])
+        drain = set()
+        for i, p in enumerate(valid):
+            if codes[i] and self._planner_lane[p]:
+                drain.add(p)
+        for p in drain:
+            owner = owners[p]
+            coord = self._coords[p]
+            case = f"degrade:{node}:{now}"
+            coord.on_error(case, ErrorKind.TASK_HANG)
+            coord.on_action_failed(case)       # restart can't fix slow
+            coord.close_case(case)
+            avg = float(self._avg[owner])
+            det = detection_time(ErrorKind.TASK_HANG, avg, unicron=True)
+            dp = max(int(self._workers[p, owner]) // 8, 1)
+            cost = transition.estimate_batch(
+                ["unicron"], self._sbytes[owner], avg, dp, det)
+            trans = (float(transition.batch_total(cost)[0])
+                     + transition.RESPAWN_UNICRON_S)  # the failed restart
+            self._fail_node(p, node)
+            self._reconfigure_lane(p, owner)
+            tr = [0.0] * len(self.policies)
+            tr[p] = trans
+            self._block_and_charge(now, [p], owners, tr)
+            self.n_degraded_drains[p] += 1
+            one = np.zeros(len(self.policies), dtype=bool)
+            one[p] = True
+            self._push(now + ev.duration_s, "repair",
+                       FailureEvent(time=now, node=node,
+                                    kind=ErrorKind.LOST_CONNECTION,
+                                    repair_s=ev.duration_s), one)
+        for p in valid:
+            if p not in drain:
+                self._slows[p][owners[p]].append(
+                    (now, now + ev.duration_s, ev.slowdown))
+
+    def _on_arrival(self, now: float, ev: TaskArrival,
+                    mask: np.ndarray) -> None:
+        P = len(self.policies)
+        avg = getattr(ev, "avg_iter_s", 30.0)
+        self._tasks.append(ev.task)
+        self._avg = np.append(self._avg, avg)
+        self._sbytes = np.append(self._sbytes,
+                                 16.0 * ev.task.model.n_params)
+        self._active = np.append(self._active, True)
+        self._workers = np.concatenate(
+            [self._workers, np.zeros((P, 1), dtype=np.int64)], axis=1)
+        for row in self._blocked:
+            row.append(0.0)
+        self._affected = np.concatenate(
+            [self._affected, np.zeros((P, 1), dtype=bool)], axis=1)
+        for p in range(P):
+            self._slows[p].append([])
+        self._fleet.grow(avg)
+        self._tids.append(self._task_sigs.setdefault(ev.task,
+                                                     len(self._task_sigs)))
+        self._kind_T.clear()                   # task axis grew a column
+        slot = len(self._tasks) - 1
+        lanes = (self._all_list if mask is self._all_lanes
+                 else np.flatnonzero(mask).tolist())
+        for p, coord in self._coords.items():
+            if p not in lanes:
+                continue
+            coord.task_launched(ev.task, self._healthy_workers(p),
+                                avg_iter_s=avg)
+            self._cis[p].append(len(coord.entries) - 1)
+            self._apply_plan(p)
+            self._reconfigs[p] += 1
+        blane_list = [p for p in lanes if not self._planner_lane[p]]
+        if blane_list:
+            # baselines: grant from the free pool, node-granular, capped
+            assigned = np.array([self._assigned[p] for p in blane_list])
+            healthy = np.array([self._n_healthy[p]
+                                for p in blane_list]) * self.gpn
+            grant = np.minimum(ev.workers_hint,
+                               np.maximum(healthy - assigned, 0))
+            if ev.task.max_workers is not None:
+                grant = np.minimum(grant, ev.task.max_workers)
+            grant -= grant % self.gpn
+            self._workers[blane_list, slot] = grant
+            for p, g in zip(blane_list, grant):
+                self._assigned[p] += int(g)
+        for p in self._all_list:
+            self._cums[p] = None          # the task axis grew a slot
+        self._mutated = True
+
+    def _on_finish(self, now: float, ev: TaskFinish,
+                   mask: np.ndarray) -> None:
+        if not 0 <= ev.slot < len(self._tasks):
+            return
+        if not self._active[ev.slot]:
+            return
+        self._active[ev.slot] = False
+        lanes = (self._all_list if mask is self._all_lanes
+                 else np.flatnonzero(mask).tolist())
+        old = self._workers[:, ev.slot]
+        for p in lanes:
+            self._assigned[p] -= int(old[p])
+            self._cums[p] = None
+            # finished tasks produce no WAF ever again, even if a later
+            # baseline rejoin hands the slot idle workers (scalar skips
+            # inactive tasks at sampling time)
+            bs, bt, bu = self._blocks[p]
+            bs.append(ev.slot)
+            bt.append(now)
+            bu.append(float("inf"))
+        self._workers[lanes, ev.slot] = 0
+        self._mutated = True
+        for p, coord in self._coords.items():
+            if p not in lanes:
+                continue
+            cis = self._cis[p]
+            ci = cis[ev.slot]
+            cis[ev.slot] = None
+            coord.task_finished(ci, self._healthy_workers(p))
+            for s, other in enumerate(cis):
+                if other is not None and other > ci:
+                    cis[s] = other - 1
+            self._apply_plan(p)
+            self._reconfigs[p] += 1
+
+    # ---- main loop ---------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: object,
+              lanes: np.ndarray) -> None:
+        if t <= self._span:
+            self._seq += 1
+            heapq.heappush(self._heap, (t, self._seq, kind, payload, lanes))
+
+    def _dispatch(self, now: float, kind: str, ev: object,
+                  mask: np.ndarray) -> None:
+        if kind == "fail":
+            self._on_failure(now, ev, mask)
+        elif kind == "repair":
+            self._on_repair(now, ev, mask)
+        elif kind == "degrade":
+            self._on_degradation(now, ev, mask)
+        elif kind == "arrive":
+            self._on_arrival(now, ev, mask)
+        elif kind == "finish":
+            self._on_finish(now, ev, mask)
+
+    def run(self, trace: Trace,
+            span_s: Optional[float] = None) -> Dict[str, SimResult]:
+        _check_trace_shape(trace, self.n_nodes, self.gpn)
+        span = self._span = _resolve_trace_span(trace, span_s)
+        entries, self._seq = _event_entries(trace, span)
+        self._heap = [(t, s, k, p, None) for t, s, k, p in entries]
+        heapq.heapify(self._heap)
+        all_lanes = self._all_lanes
+        n_shared = 0
+        snap_t: List[float] = [0.0]
+        snaps: List[np.ndarray] = [self._workers.copy()]
+        event_t: List[float] = []
+        while self._heap:
+            t, _, kind, ev, lanes = heapq.heappop(self._heap)
+            if lanes is None:
+                self._dispatch(t, kind, ev, all_lanes)
+                n_shared += 1
+            else:
+                self._dispatch(t, kind, ev, lanes)
+                self.n_events += lanes
+            event_t.append(t)
+            if self._mutated:               # workers changed: new step
+                snap_t.append(t)
+                snaps.append(self._workers.copy())
+                self._mutated = False
+        self.n_events += n_shared
+        self.n_reconfigs = np.array(self._reconfigs, dtype=np.int64)
+        self.downtime = np.array(self._downtime)
+        F = waf_mod.waf_matrix(self._tasks, self._n_total, self.hw)
+        accs, timelines = _integrate_policies(snap_t, snaps, self._blocks,
+                                              self._slows, span, F,
+                                              self._effs, event_t)
+        return {pol: SimResult(pol, float(accs[p]), timelines[p],
+                               self._reconfigs[p],
+                               self._downtime[p],
+                               int(self.n_events[p]),
+                               int(self.n_degraded_drains[p]))
+                for p, pol in enumerate(self.policies)}
 
 
 def run_policies(tasks: List[Task], assignment: List[int],
@@ -627,27 +1296,69 @@ def run_policies(tasks: List[Task], assignment: List[int],
     return out
 
 
+def _mc_result(policy: str, results: List[SimResult],
+               wall: float) -> MonteCarloResult:
+    wafs = [r.accumulated_waf for r in results]
+    arr = np.array(wafs)
+    return MonteCarloResult(policy, float(arr.mean()), float(arr.std()),
+                            wafs, wall,
+                            sum(r.n_reconfigs for r in results),
+                            sum(r.downtime_s for r in results))
+
+
 def run_monte_carlo(tasks: List[Task], assignment: List[int],
                     scenario_fn, seeds, policies: Optional[List[str]] = None,
                     hw=costmodel.A800, n_nodes: int = 16,
                     gpus_per_node: int = 8,
                     plan_cache: Optional[PlannerCache] = None,
-                    threads: Optional[int] = None
+                    threads: Optional[int] = None,
+                    engine: str = "batched"
                     ) -> Dict[str, MonteCarloResult]:
     """Batched Monte-Carlo sweep: ``scenario_fn(seed)`` generates one
-    seeded ``ClusterScenario`` per seed, and every (policy, seed) run goes
-    through the vectorized engine over ONE shared ``PlannerCache`` — a
-    cluster state reached in any seed is never re-planned in another.
+    seeded ``ClusterScenario`` per seed; all runs share ONE
+    ``PlannerCache`` — a cluster state reached in any seed is never
+    re-planned in another.
 
-    Seeds of one policy run on a thread pool (numpy's convolutions
-    release the GIL): results are deterministic regardless of scheduling
-    because every cache entry is fully determined by its key."""
+    ``engine="batched"`` (default) runs each seed ONCE through
+    ``BatchSimulator`` with every policy stacked on the policy axis; each
+    policy's ``wall_s`` is its even share of the joint pass, so suite
+    totals still sum correctly.  ``engine="vector"`` keeps the PR-2/3
+    per-(policy, seed) ``VectorSimulator`` path — the measured baseline
+    of the batched engine.  Both produce identical decisions (shared
+    planner) and WAF totals equal to float reordering.
+
+    ``threads`` applies to the vector engine only — with
+    ``engine="vector"``, seeds of one policy may run on a thread pool
+    (numpy's convolutions release the GIL): results are deterministic
+    regardless of scheduling because every cache entry is fully
+    determined by its key.  The batched engine is one sequential pass
+    per seed and ignores ``threads``."""
+    if engine not in ("batched", "vector"):
+        raise ValueError(f"unknown Monte-Carlo engine {engine!r}")
     cache = plan_cache if plan_cache is not None else PlannerCache()
     scenarios = [scenario_fn(s) for s in seeds]
-    # sequential by default: on few-core hosts the GIL-held decision glue
-    # plus duplicated cold builds outweigh the parallel convolutions
-    n_threads = threads or 1
+    pols = list(policies or EFFICIENCY)
     out: Dict[str, MonteCarloResult] = {}
+
+    if engine == "batched":
+        per_policy: Dict[str, List[SimResult]] = {p: [] for p in pols}
+        model_cache: Dict = {}
+        t0 = _time.perf_counter()
+        for sc in scenarios:
+            sim = BatchSimulator(tasks, list(assignment), pols, hw,
+                                 n_nodes=n_nodes,
+                                 gpus_per_node=gpus_per_node,
+                                 plan_cache=cache,
+                                 model_cache=model_cache)
+            for p, res in sim.run(sc).items():
+                per_policy[p].append(res)
+        share = (_time.perf_counter() - t0) / max(len(pols), 1)
+        return {p: _mc_result(p, per_policy[p], share) for p in pols}
+
+    # engine == "vector": per-(policy, seed) runs over the shared cache.
+    # Sequential by default: on few-core hosts the GIL-held decision glue
+    # plus duplicated cold builds outweigh the parallel convolutions.
+    n_threads = threads or 1
 
     def one(policy, scenario):
         sim = VectorSimulator(tasks, list(assignment), policy, hw,
@@ -656,18 +1367,12 @@ def run_monte_carlo(tasks: List[Task], assignment: List[int],
                               plan_cache=cache)
         return sim.run(scenario)
 
-    for p in policies or list(EFFICIENCY):
+    for p in pols:
         t0 = _time.perf_counter()
         if n_threads > 1 and len(scenarios) > 1:
             with ThreadPoolExecutor(max_workers=n_threads) as pool:
                 results = list(pool.map(lambda sc: one(p, sc), scenarios))
         else:
             results = [one(p, sc) for sc in scenarios]
-        wall = _time.perf_counter() - t0
-        wafs = [r.accumulated_waf for r in results]
-        arr = np.array(wafs)
-        out[p] = MonteCarloResult(p, float(arr.mean()), float(arr.std()),
-                                  wafs, wall,
-                                  sum(r.n_reconfigs for r in results),
-                                  sum(r.downtime_s for r in results))
+        out[p] = _mc_result(p, results, _time.perf_counter() - t0)
     return out

@@ -1,0 +1,299 @@
+"""Batched multi-policy engine (BatchSimulator) and its array-native
+models (detection_times / estimate_batch / FleetMonitor) against their
+scalar references."""
+import numpy as np
+import pytest
+
+from benchmarks.common import case5_tasks
+from repro.core import scenarios as sc, transition
+from repro.core.detection import (ErrorKind, FleetMonitor,
+                                  OnlineStatMonitor, detection_time,
+                                  detection_times)
+from repro.core.planner import PlannerCache
+from repro.core.simulator import (EFFICIENCY, BatchSimulator,
+                                  TraceSimulator, VectorSimulator,
+                                  run_monte_carlo)
+from repro.core.traces import DAY, trace_b
+
+N_NODES = 16
+SPAN = 7 * DAY
+POLICIES = list(EFFICIENCY)
+
+
+def _mixed(seed):
+    tasks, _ = case5_tasks()
+    return sc.mixed_fleet(n_nodes=N_NODES, span_s=SPAN, seed=seed,
+                          m_initial=len(tasks), candidates=tasks[:2],
+                          mtbf_node_s=20 * DAY, n_degradations=4)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_batched_matches_scalar_reference_per_policy(seed):
+    """One BatchSimulator pass reproduces every policy's TraceSimulator
+    run on a seeded mixed_fleet trace: accumulated WAF to float
+    reordering, decision counters and downtime exactly."""
+    tasks, assignment = case5_tasks()
+    scen = _mixed(seed)
+    bat = BatchSimulator(tasks, list(assignment), POLICIES).run(scen)
+    assert set(bat) == set(POLICIES)
+    for policy in POLICIES:
+        ref = TraceSimulator(tasks, list(assignment), policy).run(scen)
+        got = bat[policy]
+        assert got.accumulated_waf == pytest.approx(ref.accumulated_waf,
+                                                    rel=1e-9), policy
+        assert got.n_reconfigs == ref.n_reconfigs, policy
+        assert got.downtime_s == ref.downtime_s, policy
+        assert got.n_events == ref.n_events, policy
+        assert got.n_degraded_drains == ref.n_degraded_drains, policy
+
+
+def test_batched_matches_scalar_on_plain_traces():
+    """Plain failure traces (the original Fig. 11 inputs) work too."""
+    tasks, assignment = case5_tasks()
+    trace = trace_b()
+    bat = BatchSimulator(tasks, list(assignment), POLICIES).run(trace)
+    for policy in POLICIES:
+        ref = TraceSimulator(tasks, list(assignment), policy).run(trace)
+        assert bat[policy].accumulated_waf == pytest.approx(
+            ref.accumulated_waf, rel=1e-9), policy
+
+
+def test_finished_task_ghost_workers_produce_no_waf():
+    """Regression (found by batched-vs-scalar comparison): a baseline
+    rejoin may hand idle workers back to a task that already finished;
+    the scalar loop never counts them, and neither may the vectorized
+    integrations.  Seed 3 exercises exactly that interleaving."""
+    tasks, assignment = case5_tasks()
+    scen = _mixed(3)
+    for policy in ("oobleck", "megatron"):
+        ref = TraceSimulator(tasks, list(assignment), policy).run(scen)
+        vec = VectorSimulator(tasks, list(assignment), policy).run(scen)
+        assert vec.accumulated_waf == pytest.approx(ref.accumulated_waf,
+                                                    rel=1e-9), policy
+
+
+def test_run_monte_carlo_batched_default_matches_vector():
+    tasks, assignment = case5_tasks()
+
+    def make(seed):
+        return sc.independent_failures(n_nodes=N_NODES, span_s=SPAN,
+                                       seed=seed, mtbf_node_s=30 * DAY)
+
+    got = run_monte_carlo(tasks, assignment, make, seeds=range(3),
+                          n_nodes=N_NODES)           # engine="batched"
+    want = run_monte_carlo(tasks, assignment, make, seeds=range(3),
+                           n_nodes=N_NODES, engine="vector")
+    assert set(got) == set(want) == set(POLICIES)
+    for policy in POLICIES:
+        assert got[policy].per_seed == pytest.approx(
+            want[policy].per_seed, rel=1e-9)
+        assert got[policy].n_reconfigs == want[policy].n_reconfigs
+    # suite wall is attributed as an even per-policy share
+    walls = {got[p].wall_s for p in POLICIES}
+    assert len(walls) == 1
+
+
+def test_run_monte_carlo_batched_shares_plan_cache():
+    tasks, assignment = case5_tasks()
+    cache = PlannerCache()
+
+    def make(seed):
+        return sc.independent_failures(n_nodes=N_NODES, span_s=SPAN,
+                                       seed=seed, mtbf_node_s=30 * DAY)
+
+    out = run_monte_carlo(tasks, assignment, make, seeds=range(3),
+                          policies=["unicron", "megatron"],
+                          n_nodes=N_NODES, plan_cache=cache)
+    assert len(out["unicron"].per_seed) == 3
+    assert cache.stats()["hits"]["tables"] > 0   # cross-seed state reuse
+    solo = VectorSimulator(tasks, list(assignment), "unicron",
+                           n_nodes=N_NODES).run(make(1))
+    assert solo.accumulated_waf == pytest.approx(
+        out["unicron"].per_seed[1], rel=1e-9)
+
+
+def test_run_monte_carlo_rejects_unknown_engine():
+    tasks, assignment = case5_tasks()
+    with pytest.raises(ValueError, match="engine"):
+        run_monte_carlo(tasks, assignment, lambda s: _mixed(s),
+                        seeds=range(1), engine="warp")
+
+
+def test_same_task_readmitted_with_different_iteration_times():
+    """Regression: the same Task object admitted twice with different
+    ``avg_iter_s`` hints must not share one memoized transition cost —
+    statistical detection and recompute both scale with the slot's
+    iteration time."""
+    tasks, assignment = case5_tasks()
+    twin = tasks[0]
+    churn = [sc.TaskArrival(time=1000.0, task=twin, workers_hint=16,
+                            avg_iter_s=30.0),
+             sc.TaskArrival(time=2000.0, task=twin, workers_hint=16,
+                            avg_iter_s=120.0)]
+    fails = [sc.FailureEvent(time=3000.0 + 50.0 * nd, node=nd,
+                             kind=ErrorKind.TASK_HANG, repair_s=None)
+             for nd in range(N_NODES)]
+    scen = sc.ClusterScenario("readmit", N_NODES, 8, SPAN,
+                              failures=fails, churn=churn)
+    bat = BatchSimulator(tasks, list(assignment), POLICIES).run(scen)
+    for policy in POLICIES:
+        ref = TraceSimulator(tasks, list(assignment), policy).run(scen)
+        got = bat[policy]
+        assert got.downtime_s == ref.downtime_s, policy
+        assert got.accumulated_waf == pytest.approx(ref.accumulated_waf,
+                                                    rel=1e-9), policy
+
+
+def test_batched_policy_subsets():
+    """Any policy subset runs and agrees with the full stacked pass."""
+    tasks, assignment = case5_tasks()
+    scen = _mixed(5)
+    full = BatchSimulator(tasks, list(assignment), POLICIES).run(scen)
+    sub = BatchSimulator(tasks, list(assignment),
+                         ["megatron", "bamboo"]).run(scen)
+    for policy in ("megatron", "bamboo"):
+        assert sub[policy].accumulated_waf == pytest.approx(
+            full[policy].accumulated_waf, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# array-native detection model
+# ---------------------------------------------------------------------------
+
+
+def test_detection_times_matches_scalar_lookup():
+    """Every (kind, policy) cell equals the scalar detection_time."""
+    kinds = list(ErrorKind)
+    uni = np.array([True, False, True, False])
+    M = detection_times(kinds, 30.0, uni)
+    assert M.shape == (len(kinds), 4)
+    for i, kind in enumerate(kinds):
+        for j, u in enumerate(uni):
+            assert M[i, j] == detection_time(kind, 30.0, unicron=bool(u))
+
+
+def test_detection_times_per_cell_iteration_times():
+    """avg_iter_s broadcasts per cell: statistical kinds scale with the
+    owner task's iteration time, fixed-latency methods do not."""
+    kinds = [ErrorKind.TASK_HANG, ErrorKind.LOST_CONNECTION]
+    uni = np.array([True, True])
+    avg = np.array([[10.0, 40.0], [10.0, 40.0]])
+    M = detection_times(kinds, avg, uni)
+    assert M[0, 0] == detection_time(ErrorKind.TASK_HANG, 10.0)
+    assert M[0, 1] == detection_time(ErrorKind.TASK_HANG, 40.0)
+    assert M[1, 0] == M[1, 1] == detection_time(
+        ErrorKind.LOST_CONNECTION, 40.0)
+
+
+# ---------------------------------------------------------------------------
+# array-native transition model
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_batch_matches_scalar_estimates():
+    policies = POLICIES
+    sb, avg, det = 16e9, 30.0, 5.6
+    for dp in (1, 2, 8):
+        costs = transition.estimate_batch(policies, sb, avg, dp, det)
+        assert costs.shape == (len(policies), len(transition.COMPONENTS))
+        totals = transition.batch_total(costs)
+        for j, p in enumerate(policies):
+            if p == "unicron":
+                ref = transition.estimate_unicron(sb, avg, dp_degree=dp,
+                                                  detect_s=det)
+            elif p in transition.CKPT_RESTART_POLICIES:
+                ref = transition.estimate_baseline(
+                    sb, det, dynamic_reconfig=False, ckpt_restart=True)
+            else:
+                ref = transition.estimate_baseline(
+                    sb, det, dynamic_reconfig=True, ckpt_restart=False)
+            want = [ref.detect_s, ref.plan_s, ref.respawn_s,
+                    ref.migrate_s, ref.recompute_s]
+            assert list(costs[j]) == want, p
+            assert totals[j] == ref.total, p
+
+
+def test_estimate_batch_per_policy_vectors():
+    """Per-policy owner state (sizes, iteration times, DP degrees,
+    detection latencies) lands in the right rows."""
+    policies = ["unicron", "megatron"]
+    costs = transition.estimate_batch(
+        policies, np.array([16e9, 32e9]), np.array([30.0, 60.0]),
+        np.array([4, 1]), np.array([5.6, 1800.0]))
+    uni = transition.estimate_unicron(16e9, 30.0, dp_degree=4,
+                                      detect_s=5.6)
+    meg = transition.estimate_baseline(32e9, 1800.0,
+                                       dynamic_reconfig=False,
+                                       ckpt_restart=True)
+    assert transition.batch_total(costs)[0] == uni.total
+    assert transition.batch_total(costs)[1] == meg.total
+
+
+def test_estimate_batch_lookup_miss_and_sources():
+    c_hit = transition.estimate_batch(["unicron"], 1e9, 30.0, 1, 5.6)
+    c_miss = transition.estimate_batch(["unicron"], 1e9, 30.0, 1, 5.6,
+                                       lookup_hit=False)
+    assert c_hit[0, 1] == transition.PLAN_LOOKUP_S
+    assert c_miss[0, 1] == transition.PLAN_SOLVE_S
+    # dp=1 without in-memory checkpoint falls back to the persistent tier
+    c_pers = transition.estimate_batch(["unicron"], 1e9, 30.0, 1, 5.6,
+                                       inmemory_available=False)
+    assert c_pers[0, 3] == 1e9 / transition.BW_PERSISTENT
+
+
+def test_estimate_batch_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown recovery policies"):
+        transition.estimate_batch(["unicron", "k8s"], 1e9, 30.0, 1, 5.6)
+
+
+# ---------------------------------------------------------------------------
+# fleet monitor ring buffer
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_monitor_primed_matches_scalar_monitor():
+    fm = FleetMonitor.primed([30.0, 10.0])
+    for i, avg in enumerate((30.0, 10.0)):
+        om = OnlineStatMonitor.primed(avg)
+        assert fm.averages()[i] == om.average
+        for waited in (avg, 1.05 * avg, 1.2 * avg, 4.0 * avg):
+            want = {"ok": 0, "degraded": 1, "failed": 2}[om.status(waited)]
+            assert int(fm.statuses([i], waited)[0]) == want
+
+
+def test_fleet_monitor_rolling_window_matches_scalar():
+    fm = FleetMonitor(1, window=4)
+    om = OnlineStatMonitor(window=4)
+    for x in (10.0, 12.0, 8.0, 30.0, 6.0, 7.0):     # wraps the ring
+        fm.observe([0], x)
+        om.observe(x)
+        assert fm.averages()[0] == pytest.approx(om.average, rel=1e-12)
+    assert int(fm.statuses([0], 100.0)[0]) == 2      # > 3x average
+
+
+def test_fleet_monitor_empty_history_is_ok():
+    fm = FleetMonitor(2)
+    assert np.isnan(fm.averages()).all()
+    assert list(fm.statuses([0, 1], 1e9)) == [0, 0]  # no history: ok
+
+
+def test_fleet_monitor_grow_admits_primed_task():
+    fm = FleetMonitor.primed([30.0])
+    slot = fm.grow(12.0)
+    assert slot == 1 and fm.n_tasks == 2
+    assert fm.averages()[1] == OnlineStatMonitor.primed(12.0).average
+    assert int(fm.statuses([1], 12.0 * 1.2)[0]) == 1
+
+
+def test_fleet_monitor_vectorized_observe_scatter():
+    fm = FleetMonitor.primed([10.0, 10.0, 10.0])
+    fm.observe([0, 2], [20.0, 40.0])
+    om0 = OnlineStatMonitor.primed(10.0)
+    om0.observe(20.0)
+    assert fm.averages()[0] == pytest.approx(om0.average, rel=1e-12)
+    assert fm.averages()[1] == 10.0                  # untouched row

@@ -134,6 +134,105 @@ def test_agent_task_finished_reports_deduplicated(loop):
     assert cl.tick(now=12.0) == []
 
 
+def test_agent_launch_request_fires_task_arrival_trigger(loop):
+    """Agents announce task launches through the KV store and the next
+    tick fires the coordinator's ``task_launched`` trigger end-to-end:
+    the task is admitted, the whole cluster is replanned, and the event
+    carries the plan (Figure 7 trigger 6)."""
+    cl, agents, cluster, coord = loop
+    new_task = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                              global_batch=32))
+    rec = agents[6].request_task_launch(new_task, now=40.0,
+                                       epoch=coord.plan_epoch,
+                                       avg_iter_s=12.0)
+    assert rec["task"] is new_task
+    events = cl.tick(now=41.0)
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.kind is None and ev.action is Action.RESUME
+    assert len(coord.entries) == 3
+    assert coord.entries[-1].task is new_task
+    assert coord.entries[-1].avg_iter_s == 12.0
+    assert ev.plan is not None and len(ev.plan) == 3
+    assert sum(ev.plan) <= cluster.healthy_workers()
+    assert coord.plan_stats.task_launches == 1
+    # the request is consumed: the next tick is quiet
+    assert cl.tick(now=42.0) == []
+
+
+def test_agent_launch_requests_deduplicated_per_task(loop):
+    """Several nodes may announce the same launch; one tick admits the
+    task once."""
+    cl, agents, cluster, coord = loop
+    new_task = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                              global_batch=32))
+    e = coord.plan_epoch
+    for node in (1, 2, 3):
+        agents[node].request_task_launch(new_task, now=10.0, epoch=e)
+    events = cl.tick(now=11.0)
+    assert len(events) == 1
+    assert len(coord.entries) == 3
+    assert cl.tick(now=12.0) == []
+
+
+def test_same_node_same_time_launches_both_admitted(loop):
+    """Two distinct launches announced by one node at the same timestamp
+    must not overwrite each other in the status monitor (per-agent
+    sequence in the key)."""
+    cl, agents, cluster, coord = loop
+    e = coord.plan_epoch
+    a = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                       global_batch=32))
+    b = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                       global_batch=16))
+    agents[2].request_task_launch(a, now=10.0, epoch=e)
+    agents[2].request_task_launch(b, now=10.0, epoch=e)
+    events = cl.tick(now=11.0)
+    assert len(events) == 2
+    admitted = {coord.entries[-2].task, coord.entries[-1].task}
+    assert admitted == {a, b}
+
+
+def test_launch_admission_order_is_chronological(loop):
+    """Launch keys drain in sorted order, so lexicographic order must be
+    chronological across digit-width boundaries (99.0 vs 100.0): the
+    earlier request is admitted first, which fixes coordinator entry
+    order and the plans produced."""
+    cl, agents, cluster, coord = loop
+    e = coord.plan_epoch
+    a = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                       global_batch=32))
+    b = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                       global_batch=16))
+    agents[1].request_task_launch(a, now=99.0, epoch=e)
+    agents[1].request_task_launch(b, now=100.0, epoch=e)
+    events = cl.tick(now=101.0)
+    assert len(events) == 2
+    assert coord.entries[-2].task is a       # admitted first
+    assert coord.entries[-1].task is b
+
+
+def test_stale_epoch_launch_request_is_dropped(loop):
+    """A launch request computed against a superseded plan state (its
+    epoch predates a task-set change) is consumed without firing."""
+    cl, agents, cluster, coord = loop
+    old_epoch = coord.plan_epoch
+    new_task = Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                              global_batch=32))
+    # the task set shifts before the request becomes visible
+    agents[0].report_task_finished(task_index=0, now=50.0, epoch=old_epoch)
+    assert len(cl.tick(now=50.5)) == 1
+    assert coord.plan_epoch == old_epoch + 1
+    agents[4].request_task_launch(new_task, now=51.0, epoch=old_epoch)
+    assert cl.tick(now=51.5) == []             # stale request: no event
+    assert len(coord.entries) == 1
+    # re-announced against the current epoch, it is honored
+    agents[4].request_task_launch(new_task, now=52.0,
+                                  epoch=coord.plan_epoch)
+    assert len(cl.tick(now=52.5)) == 1
+    assert coord.entries[-1].task is new_task
+
+
 def test_stale_epoch_task_report_never_removes_wrong_task(loop):
     """Task indices are positional: a duplicate finish report that drains
     only after the task set already shifted carries a stale plan epoch

@@ -275,3 +275,43 @@ def test_flash_vjp_random_shapes(data):
         q, k, v)
     for a, b in zip(g1, g2):
         np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_batched_engine_matches_vector_on_random_subsets(data):
+    """Random seed/policy subsets through ``engine="batched"`` vs
+    ``engine="vector"``: per-seed WAF, reconfiguration counts and
+    downtime agree for every policy (ISSUE 4: one stacked pass per seed
+    must reproduce every per-policy run)."""
+    from benchmarks.common import case5_tasks
+    from repro.core import scenarios as sc
+    from repro.core.simulator import EFFICIENCY, run_monte_carlo
+    from repro.core.traces import DAY
+
+    tasks, assignment = case5_tasks()
+    policies = data.draw(st.lists(st.sampled_from(list(EFFICIENCY)),
+                                  min_size=1, max_size=3, unique=True))
+    seeds = data.draw(st.lists(st.integers(0, 60), min_size=1,
+                               max_size=2, unique=True))
+    scenario_cls = data.draw(st.sampled_from(["mixed", "independent"]))
+
+    def make(seed):
+        if scenario_cls == "mixed":
+            return sc.mixed_fleet(n_nodes=16, span_s=7 * DAY, seed=seed,
+                                  m_initial=len(tasks),
+                                  candidates=tasks[:2],
+                                  mtbf_node_s=20 * DAY, n_degradations=3)
+        return sc.independent_failures(n_nodes=16, span_s=7 * DAY,
+                                       seed=seed, mtbf_node_s=20 * DAY)
+
+    got = run_monte_carlo(tasks, assignment, make, seeds=seeds,
+                          policies=policies, n_nodes=16, engine="batched")
+    want = run_monte_carlo(tasks, assignment, make, seeds=seeds,
+                           policies=policies, n_nodes=16, engine="vector")
+    for policy in policies:
+        import pytest
+        assert got[policy].per_seed == pytest.approx(
+            want[policy].per_seed, rel=1e-9), policy
+        assert got[policy].n_reconfigs == want[policy].n_reconfigs
+        assert got[policy].downtime_s == want[policy].downtime_s

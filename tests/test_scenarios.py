@@ -157,7 +157,8 @@ def test_monte_carlo_shares_plan_cache():
 
     out = run_monte_carlo(tasks, assignment, make, seeds=range(3),
                           policies=["unicron", "megatron"],
-                          n_nodes=N_NODES, plan_cache=cache)
+                          n_nodes=N_NODES, plan_cache=cache,
+                          engine="vector")
     assert set(out) == {"unicron", "megatron"}
     assert len(out["unicron"].per_seed) == 3
     stats = cache.stats()
