@@ -22,8 +22,15 @@ engine work the batched axis deduplicates (decode, detection/transition
 arithmetic, bookkeeping, WAF accumulation); it is also the operating
 regime of a fleet study sweeping policies over thousands of replays of a
 standing scenario library.  The cold end-to-end walls are reported as
-columns (cold runs are planner-dispatch-bound, which
-``bench_planner_scale`` measures separately).
+columns: cold runs are planner-dispatch-bound, and every simulator
+dispatch materializes one plan, so both PlanTable engines pay the same
+chain convolutions plus one traceback — ``cold_batched_wall_s`` (the
+default level-synchronous batched planner engine) therefore tracks
+``cold_segtree_wall_s`` (the PR-3 per-merge engine, identical seeds),
+with ``cold_plan_speedup`` their ratio.  The batched engine's whole-table
+replan win (O(log m) stacked launches, value-only assembly, traceback
+only for the dispatched scenario) is measured in isolation by
+``bench_planner_scale``'s whole-table churn axis.
 
 Hard asserts, so the harness fails loudly on a regression:
 
@@ -114,19 +121,39 @@ def run() -> list:
                                   engine="batched")
             bat_walls.append(_suite_wall(mcb))
         bat_total = min(bat_walls)
-        # cold end-to-end batched wall (fresh planner state)
-        cold_bat = _suite_wall(run_monte_carlo(
+        # cold end-to-end batched walls (fresh planner state; min of 2 —
+        # same noise treatment as the warm walls).  The cold path is
+        # planner-dispatch-bound: every event materializes one plan, so
+        # the engines' per-dispatch work (chain convolutions + one
+        # traceback) is the wall and the default batched planner engine
+        # tracks the PR-3 segtree engine (its whole-table replan win —
+        # O(log m) stacked launches, value-only, traceback only for the
+        # dispatched scenario — is measured by ``bench_planner_scale``'s
+        # whole-table churn axis).
+        cold_bat = min(_suite_wall(run_monte_carlo(
             tasks, assignment, make, seeds=range(seeds), n_nodes=n_nodes,
             gpus_per_node=GPN, plan_cache=PlannerCache(),
-            engine="batched"))
+            engine="batched")) for _ in range(2))
+        cold_seg = min(_suite_wall(run_monte_carlo(
+            tasks, assignment, make, seeds=range(seeds), n_nodes=n_nodes,
+            gpus_per_node=GPN, plan_cache=PlannerCache(),
+            engine="batched", plan_engine="segtree")) for _ in range(2))
+        cold_plan_speedup = cold_seg / cold_bat
 
         scalar_total = 0.0
         scalar_s, rel_errs, bat_rel_errs = {}, {}, {}
         for policy, r in mc.items():
             t0 = time.perf_counter()
+            # the scalar loop is pinned to the PR-4 planner configuration
+            # (per-merge segtree tables): it is the preserved wall-clock
+            # baseline the committed suite_speedup rows were measured
+            # against.  Letting it ride the batched engine default would
+            # HALVE its eager whole-table rebuild walls (~44s -> ~22s per
+            # paper-scale seed on the recording machine) and silently
+            # deflate every vector-vs-scalar ratio.
             ref = TraceSimulator(tasks, list(assignment), policy,
-                                 n_nodes=n_nodes,
-                                 gpus_per_node=GPN).run(s0)
+                                 n_nodes=n_nodes, gpus_per_node=GPN,
+                                 plan_engine="segtree").run(s0)
             scalar_s[policy] = time.perf_counter() - t0
             scalar_total += scalar_s[policy]
             rel = (abs(ref.accumulated_waf - r.per_seed[0])
@@ -172,6 +199,8 @@ def run() -> list:
                 "batched_wall_s": r.wall_s,
                 "warm_vector_wall_s": warm_vec / len(mc),
                 "cold_batched_wall_s": cold_bat / len(mc),
+                "cold_segtree_wall_s": cold_seg / len(mc),
+                "cold_plan_speedup": cold_plan_speedup,
                 "waf_mean": r.waf_mean,
                 "waf_rel_err": bat_rel_errs[policy],
                 "batched_speedup": batched_speedup,
@@ -180,5 +209,6 @@ def run() -> list:
          ["config", "policy", "engine", "workers", "tasks", "seeds",
           "events", "vec_wall_s", "vec_per_seed_ms", "scalar_seed_s",
           "batched_wall_s", "warm_vector_wall_s", "cold_batched_wall_s",
+          "cold_segtree_wall_s", "cold_plan_speedup",
           "waf_mean", "waf_rel_err", "suite_speedup", "batched_speedup"])
     return rows

@@ -10,18 +10,33 @@ Per-convolution latency at n in {256, 1024, 4096} for the four kernels:
   * pallas  — ``kernels.maxplus.maxplus_conv`` in interpret mode (f32;
               the compiled Mosaic path needs a TPU).
 
+Plus the stacked axis behind the ``engine="batched"`` PlanTable: one
+``_maxplus_vals_fused_batched`` call over a (B, n+1) stack vs a Python
+loop of B banded 2-D fused calls, at B in {16, 64}.  The stacked win is
+a *launch-overhead* win: it is largest where per-row work is small
+(n x band below the overhead crossover — exactly the per-level merge
+stacks of the batched engine), and decays toward 1x where a single
+row's candidate tiles already saturate the memory system (there the
+stacked kernel falls through to per-row tiles, so it never loses).
+
 Hard asserts (the harness fails loudly on a regression):
 
   * fused and banded outputs are bitwise identical to ``_maxplus_vals``
-    on their candidate sets; pallas matches the f32 oracle to 1e-6;
+    on their candidate sets; the stacked kernel is bitwise identical to
+    its per-slice 2-D calls; pallas (2-D and grid-batched) matches the
+    f32 oracle to 1e-6;
   * at n >= 1024 and cap = n/8 the banded kernel is >= 5x faster than
     the dense convolution the engines previously always ran
-    (``_maxplus_vals``) — the acceptance floor.  ``banded_vs_fused``
+    (``_maxplus_vals``) — the PR-3 acceptance floor.  ``banded_vs_fused``
     (banded against the *new* dense fused kernel) is also emitted; it
-    sits near the 8x candidate-count ratio minus memory-system effects.
+    sits near the 8x candidate-count ratio minus memory-system effects;
+  * in the overhead-bound regime (n = 128, the batched engine's
+    narrow-level shape) the stacked kernel is >= 2x faster than looped
+    2-D fused calls at every batch >= 16 — the PR-5 acceptance floor.
+    Larger-n stack rows are emitted unasserted to track the crossover.
 
-``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grid to
-{256, 1024} for CI smoke runs.
+``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grids for
+CI smoke runs.
 """
 from __future__ import annotations
 
@@ -30,11 +45,15 @@ import os
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.planner import _maxplus_vals, _maxplus_vals_fused
+from repro.core.planner import (_maxplus_vals, _maxplus_vals_fused,
+                                _maxplus_vals_fused_batched)
 
 GRID_N = [256, 1024, 4096]
 CAP_DIV = 8                    # banded regime: cap = n / 8
 BANDED_FLOOR = 5.0             # banded >= 5x dense at cap <= n/8, n >= 1024
+BATCH_GRID = [(128, 16), (128, 64), (256, 64), (1024, 64)]   # (n, B)
+BATCH_FLOOR = 2.0              # stacked >= 2x looped at n = 128, B >= 16
+BATCH_FLOOR_N = 128
 PALLAS_TOL = 1e-6
 
 
@@ -91,7 +110,7 @@ def run() -> list:
                   f"(floor {BANDED_FLOOR:.0f}x; vs fused "
                   f"{banded_vs_fused:.1f}x)")
         rows.append({
-            "workers": n, "cap": cap,
+            "workers": n, "cap": cap, "batch": None,   # 2-D (unstacked) row
             "numpy_ms": numpy_s * 1e3,
             "fused_ms": fused_s * 1e3,
             "banded_ms": banded_s * 1e3,
@@ -101,8 +120,73 @@ def run() -> list:
             "banded_vs_fused": banded_vs_fused,
         })
     assert checked_floor, "grid never hit the n >= 1024 banded floor check"
+
+    # ---- stacked axis: one batched call vs a loop of 2-D fused calls ------
+    batch_grid = ([g for g in BATCH_GRID if g[0] <= 256] if quick
+                  else BATCH_GRID)
+    checked_batch_floor = False
+    for n, batch in batch_grid:
+        cap = n // CAP_DIV
+        rng = np.random.RandomState(n + batch)
+        prev = np.maximum.accumulate(
+            rng.uniform(0.0, 100.0, (batch, n + 1)), axis=1)
+        g = rng.uniform(0.0, 100.0, (batch, n + 1))
+        g[:, cap:] = g[:, cap:cap + 1]
+        bands = [cap] * batch
+
+        got = _maxplus_vals_fused_batched(prev, g, bands)
+        for r in range(batch):
+            assert np.array_equal(
+                got[r], _maxplus_vals_fused(prev[r], g[r], band=cap)), (
+                n, batch, r)
+
+        def _looped():
+            for r in range(batch):
+                _maxplus_vals_fused(prev[r], g[r], band=cap)
+
+        stacked_s = timeit(
+            lambda: _maxplus_vals_fused_batched(prev, g, bands),
+            iters=iters, number=3)
+        looped_s = timeit(_looped, iters=iters, number=3)
+        stack_speedup = looped_s / stacked_s
+        if n == BATCH_FLOOR_N and batch >= 16:
+            checked_batch_floor = True
+            assert stack_speedup >= BATCH_FLOOR, (
+                f"stacked max-plus speedup {stack_speedup:.2f}x at "
+                f"(n={n}, batch={batch}, cap={cap}) below the "
+                f"{BATCH_FLOOR:.0f}x floor vs looped 2-D fused calls")
+            print(f"[floor check] stacked speedup at (n={n}, "
+                  f"batch={batch}, cap={cap}): {stack_speedup:.1f}x vs "
+                  f"looped 2-D fused (floor {BATCH_FLOOR:.0f}x)")
+        rows.append({
+            "workers": n, "cap": cap, "batch": batch,
+            "stacked_ms": stacked_s * 1e3,
+            "looped_ms": looped_s * 1e3,
+            "stack_speedup": stack_speedup,
+        })
+    assert checked_batch_floor, "grid never hit the stacked floor check"
+
+    # grid-batched Pallas kernel: interpret-mode equivalence at the
+    # smallest stack (full timing would measure the interpreter, not the
+    # kernel; CI pins broader equivalence in tests/test_kernels.py)
+    from repro.kernels.maxplus import maxplus_conv_batched, maxplus_conv_np
+    n, batch = 64, 4
+    rng = np.random.RandomState(0)
+    prev = np.maximum.accumulate(
+        rng.uniform(0.0, 100.0, (batch, n + 1)).astype(np.float32), axis=1)
+    g = rng.uniform(0.0, 100.0, (batch, n + 1)).astype(np.float32)
+    cap = n // CAP_DIV
+    g[:, cap:] = g[:, cap:cap + 1]
+    got = np.asarray(maxplus_conv_batched(prev, g, [cap] * batch,
+                                          interpret=True))
+    for r in range(batch):
+        oracle = maxplus_conv_np(prev[r], g[r], band=cap)
+        rel = np.max(np.abs(got[r] - oracle)
+                     / np.maximum(np.abs(oracle), 1.0))
+        assert rel < PALLAS_TOL, (r, rel)
+
     emit(rows, "maxplus",
-         ["workers", "cap", "numpy_ms", "fused_ms", "banded_ms",
+         ["workers", "cap", "batch", "numpy_ms", "fused_ms", "banded_ms",
           "pallas_interp_ms", "fused_speedup", "banded_speedup",
-          "banded_vs_fused"])
+          "banded_vs_fused", "stacked_ms", "looped_ms", "stack_speedup"])
     return rows

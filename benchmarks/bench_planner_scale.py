@@ -4,8 +4,8 @@ Measures, over (workers, tasks) in {64..1024} x {4..32}:
 
   * ``solve``            — vectorized max-plus DP latency, vs the retained
                            scalar ``solve_reference`` where tractable;
-  * ``PlanTable`` rebuild — incremental build (segment-tree engine) vs the
-                           scalar scenario-by-scenario reference where
+  * ``PlanTable`` rebuild — incremental build (batched engine default) vs
+                           the scalar scenario-by-scenario reference where
                            tractable;
   * dispatch             — ``table.lookup`` latency (the O(1) failure-time
                            path);
@@ -13,7 +13,21 @@ Measures, over (workers, tasks) in {64..1024} x {4..32}:
                            two scenario lookups per step) through a shared
                            ``PlannerCache``, segment-tree engine vs the
                            PR-2 chain engine, on a cap-aware fleet at
+                           (n=1024, m=64);
+  * whole-table rebuild  — a seeded churn walk where every step rebuilds
+                           the FULL scenario table (totals for every
+                           ``fault:i``/``finish:i``/``join`` key) and
+                           dispatches one plan: the level-synchronous
+                           batched engine (stacked level launches,
+                           value-only assembly, one lazy traceback) vs
+                           the per-merge segtree engine (a ``lookup`` —
+                           convolutions + argmax traceback + plan WAF —
+                           per scenario), fair-share caps at
                            (n=1024, m=64).
+
+Skipped reference cells (the scalar path is O(m n^2) Python — it only
+runs where that finishes in seconds) are emitted as null, never as
+``""``; ``check_regression`` skips null/absent metrics explicitly.
 
 Hard asserts, so the harness fails loudly on a regression:
 
@@ -23,7 +37,11 @@ Hard asserts, so the harness fails loudly on a regression:
     scalar reference;
   * the segment-tree churn walk is >= 3x faster than the chain engine at
     (n=1024, m=64), with identical-to-1e-6 rewards between the engines
-    there and against ``solve_reference`` on the small verification walk.
+    there and against ``solve_reference`` on the small verification walk;
+  * the batched whole-table walk is >= 3x faster than the segtree engine
+    at (n=1024, m=64), with every per-step scenario total equal to 1e-6
+    across engines there and against ``solve_reference`` on the small
+    verification walk.
 
 ``REPRO_BENCH_QUICK=1`` (set by ``run.py --quick``) trims the grid for CI
 smoke runs.
@@ -48,6 +66,7 @@ SPEEDUP_FLOOR = 50.0      # hard floor at (n, m) == REF_LIMIT
 CHURN_N, CHURN_M = 1024, 64
 CHURN_STEPS = 12
 CHURN_FLOOR = 3.0         # segtree churn walk vs chain engine
+TABLE_FLOOR = 3.0         # batched whole-table walk vs segtree engine
 REL_TOL = 1e-6
 
 _tasks = fleet_tasks
@@ -83,27 +102,91 @@ def _churn_walk(tasks, assignment0, n, engine, steps, seed=0,
     return time.perf_counter() - t0, rewards
 
 
+def _reference_reward(tasks, key, assignment, m):
+    """``solve_reference`` total for one scenario of one walk state."""
+    kind, _, idx = key.partition(":")
+    n_now = sum(assignment)
+    if kind == "join":
+        inp = PlanInput(tuple(tasks), tuple(assignment), n_now + 8,
+                        3600.0, 120.0, (False,) * m)
+    elif kind == "fault":
+        ti = int(idx)
+        inp = PlanInput(tuple(tasks), tuple(assignment),
+                        max(n_now - 8, 0), 3600.0, 120.0,
+                        tuple(i == ti for i in range(m)))
+    else:
+        ti = int(idx)
+        rem_t = tuple(tasks[:ti] + tasks[ti + 1:])
+        rem_a = tuple(assignment[:ti] + assignment[ti + 1:])
+        inp = PlanInput(rem_t, rem_a, n_now, 3600.0, 120.0,
+                        (False,) * (m - 1))
+    return solve_reference(inp, A800).total_reward
+
+
 def _churn_reference_check(n: int, m: int, steps: int) -> None:
     """Small walk where the scalar reference is tractable: every looked-up
     segment-tree scenario must match ``solve_reference`` to 1e-6."""
     tasks = _tasks(m, max_workers=max(n // 8, 8))
     _, rewards = _churn_walk(tasks, [n // m] * m, n, "segtree", steps)
     for key, assignment, got in rewards:
-        kind, _, idx = key.partition(":")
-        ti = int(idx)
-        n_now = sum(assignment)
-        if kind == "fault":
-            inp = PlanInput(tuple(tasks), assignment, max(n_now - 8, 0),
-                            3600.0, 120.0,
-                            tuple(i == ti for i in range(m)))
-        else:
-            rem_t = tuple(tasks[:ti] + tasks[ti + 1:])
-            rem_a = assignment[:ti] + assignment[ti + 1:]
-            inp = PlanInput(rem_t, rem_a, n_now, 3600.0, 120.0,
-                            (False,) * (m - 1))
-        want = solve_reference(inp, A800)
-        assert _rel_err(got, want.total_reward) < REL_TOL, (
-            key, assignment, got, want.total_reward)
+        want = _reference_reward(tasks, key, list(assignment), m)
+        assert _rel_err(got, want) < REL_TOL, (key, assignment, got, want)
+
+
+def _table_walk(tasks, assignment0, n, engine, steps, seed=0,
+                changes_per_step=3, values=(4, 8, 12, 16)):
+    """Whole-table churn workload: per step, rebuild the FULL scenario
+    table of the current state — every ``fault:i``/``finish:i``/``join``
+    total materialized via ``rebuild_values`` (the batched engine's
+    value-only level sweeps; the other engines assemble each plan) — then
+    dispatch ONE fault plan, then apply one reconfiguration-sized change.
+    Identical seeds give identical key/assignment sequences across
+    engines, so the total streams must agree.
+
+    Churn draws stay within the fleet's worker caps so ``sum(assignment)``
+    never exceeds the fixed ``n_budget`` (otherwise the DP width — and
+    with it every content-keyed cache entry — would silently change
+    between steps).  Reward rows for every (task, draw) pair are
+    pre-warmed per engine lane through the same cache the walk uses:
+    both lanes then measure pure engine work, not cost-model sweeps."""
+    cache = PlannerCache()
+    assignment = list(assignment0)
+    rng = random.Random(seed)
+    m = len(tasks)
+    for v in sorted(set(values) | {assignment0[0]}):   # warm reward rows
+        warm = PlanTable(tasks, [v] * m, A800, 3600.0, 120.0,
+                         lazy=True, cache=cache, n_budget=n + 8,
+                         engine=engine)
+        warm.rebuild_values()
+    rewards = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        table = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                            n_budget=n + 8, engine=engine)
+        totals = table.rebuild_values()
+        state = tuple(assignment)
+        rewards.extend((key, state, total)
+                       for key, total in sorted(totals.items()))
+        plan = table.lookup(f"fault:{rng.randrange(m)}")
+        rewards.append(("dispatch", state, plan.total_reward))
+        for _ in range(changes_per_step):
+            assignment[rng.randrange(m)] = rng.choice(values)
+    return time.perf_counter() - t0, rewards
+
+
+def _table_reference_check(n: int, m: int, steps: int) -> None:
+    """Small whole-table walk where the scalar reference is tractable:
+    every batched-engine scenario total must match ``solve_reference``.
+    Churn draws stay within this config's caps (the walk's cap/budget
+    invariant), like the measured walk's do."""
+    tasks = _tasks(m, max_workers=max(n // m, 8))
+    _, rewards = _table_walk(tasks, [n // m] * m, n, "batched", steps,
+                             values=(4, 8, 12))
+    for key, assignment, got in rewards:
+        if key == "dispatch":
+            continue
+        want = _reference_reward(tasks, key, list(assignment), m)
+        assert _rel_err(got, want) < REL_TOL, (key, assignment, got, want)
 
 
 def run() -> list:
@@ -134,9 +217,10 @@ def run() -> list:
                    "solve_ms": solve_fast_s * 1e3,
                    "rebuild_ms": rebuild_fast_s * 1e3,
                    "dispatch_us": dispatch_s * 1e6,
-                   "solve_ref_ms": "", "solve_speedup": "",
-                   "rebuild_ref_ms": "", "rebuild_speedup": "",
-                   "reward_match": ""}
+                   # null (not ""): the scalar reference is skipped here
+                   "solve_ref_ms": None, "solve_speedup": None,
+                   "rebuild_ref_ms": None, "rebuild_speedup": None,
+                   "reward_match": None}
             if with_ref:
                 fast = solve(inp, A800)
                 t0 = time.perf_counter()
@@ -194,18 +278,43 @@ def run() -> list:
     print(f"[floor check] churn-rebuild speedup at (n={n}, m={m}, "
           f"{CHURN_STEPS} steps): {churn_speedup:.1f}x "
           f"(floor {CHURN_FLOOR:.0f}x)")
+
+    # ---- whole-table rebuild walk: batched engine vs segtree --------------
+    # Fair-share caps (n/m — the tightest cap every fleet model stays
+    # feasible under) and cap-bounded churn draws, so DP chain keys stay
+    # stable and the banded kernels operate in their design regime.
+    _table_reference_check(n=96, m=8, steps=2 if quick else 4)
+    tasks = _tasks(m, max_workers=n // m)
+    bat_s, bat_rewards = _table_walk(tasks, assignment0, n, "batched",
+                                     CHURN_STEPS)
+    tseg_s, tseg_rewards = _table_walk(tasks, assignment0, n, "segtree",
+                                       CHURN_STEPS)
+    for (key, asg, a), (_, _, b) in zip(bat_rewards, tseg_rewards):
+        assert _rel_err(a, b) < REL_TOL, (key, asg, a, b)
+    table_speedup = tseg_s / bat_s
+    assert table_speedup >= TABLE_FLOOR, (
+        f"batched whole-table walk {table_speedup:.1f}x at (n={n}, m={m}) "
+        f"below the {TABLE_FLOOR:.0f}x floor vs the segtree engine")
+    print(f"[floor check] whole-table rebuild speedup at (n={n}, m={m}, "
+          f"{CHURN_STEPS} steps, {len(bat_rewards)} scenario totals): "
+          f"{table_speedup:.1f}x (floor {TABLE_FLOOR:.0f}x)")
     rows.append({"workers": n, "tasks": m,
-                 "solve_ms": "", "solve_ref_ms": "", "solve_speedup": "",
-                 "rebuild_ms": "", "rebuild_ref_ms": "",
-                 "rebuild_speedup": "", "dispatch_us": "",
-                 "reward_match": len(seg_rewards),
+                 "solve_ms": None, "solve_ref_ms": None,
+                 "solve_speedup": None, "rebuild_ms": None,
+                 "rebuild_ref_ms": None, "rebuild_speedup": None,
+                 "dispatch_us": None,
+                 "reward_match": len(seg_rewards) + len(bat_rewards),
                  "churn_segtree_ms": seg_s * 1e3,
                  "churn_chain_ms": chain_s * 1e3,
-                 "churn_speedup": churn_speedup})
+                 "churn_speedup": churn_speedup,
+                 "table_batched_ms": bat_s * 1e3,
+                 "table_segtree_ms": tseg_s * 1e3,
+                 "table_speedup": table_speedup})
 
     emit(rows, "planner_scale",
          ["workers", "tasks", "solve_ms", "solve_ref_ms", "solve_speedup",
           "rebuild_ms", "rebuild_ref_ms", "rebuild_speedup", "dispatch_us",
           "reward_match", "churn_segtree_ms", "churn_chain_ms",
-          "churn_speedup"])
+          "churn_speedup", "table_batched_ms", "table_segtree_ms",
+          "table_speedup"])
     return rows

@@ -35,22 +35,33 @@ EQ_TOL = 1e-6
 SPECS = {
     "planner_scale": {
         "keys": ("workers", "tasks"),
-        "higher": ("solve_speedup", "rebuild_speedup", "churn_speedup"),
+        "higher": (
+            "solve_speedup",
+            "rebuild_speedup",
+            "churn_speedup",
+            "table_speedup",
+        ),
         # sub-ms small-n measurements are too noisy for a ratio gate
         "min_workers": 256,
     },
     "maxplus": {
-        "keys": ("workers", "cap"),
-        "higher": ("fused_speedup", "banded_speedup"),
-        # sub-ms small-n measurements are too noisy for a ratio gate
+        # "batch" is null on the 2-D kernel rows, (n, B) on the stacked
+        # axis rows — part of the key either way
+        "keys": ("workers", "cap", "batch"),
+        "higher": ("fused_speedup", "banded_speedup", "stack_speedup"),
+        # sub-ms small-n measurements are too noisy for a ratio gate;
+        # the stacked axis is exempt (its floor is asserted in-bench and
+        # its ratios are launch-overhead ratios, stable at small n)
         "min_workers": 1024,
+        "min_workers_exempt": ("stack_speedup",),
     },
     "cluster_sim": {
         # engine axis: "vector" rows carry the vector-vs-scalar suite
         # speedup, "batched" rows the batched-vs-vector (shared planner
-        # state) speedup and the batched per-policy waf_mean
+        # state) speedup, the batched per-policy waf_mean and the cold
+        # planner-engine ratio (batched vs segtree PlanTable engine)
         "keys": ("config", "policy", "engine"),
-        "higher": ("suite_speedup", "batched_speedup"),
+        "higher": ("suite_speedup", "batched_speedup", "cold_plan_speedup"),
         "equal": ("waf_mean", "events"),
     },
     "costmodel": {
@@ -75,6 +86,15 @@ def _load(path):
 
 
 def _num(value):
+    """Numeric cell value, or None for a skipped metric.
+
+    Benches emit null for metrics they skipped at a grid point (e.g. the
+    scalar reference beyond its tractable sizes) and new columns are
+    simply absent from old baselines — both are explicit "no
+    measurement" markers, never comparison failures.  Legacy baselines
+    recorded skips as empty strings; treat those the same way."""
+    if value is None or (isinstance(value, str) and not value.strip()):
+        return None
     try:
         return float(value)
     except (TypeError, ValueError):
@@ -91,20 +111,23 @@ def check_bench(name, spec, baseline_rows, fresh_rows, slack):
     baseline = {key_of(r): r for r in baseline_rows}
     violations = []
     compared = 0
+    min_workers = spec.get("min_workers")
+    exempt = spec.get("min_workers_exempt", ())
     for row in fresh_rows:
         key = key_of(row)
         prefix = spec.get("skip_key_prefix")
         if prefix and any(part.startswith(prefix) for part in key):
             continue
-        min_workers = spec.get("min_workers")
+        skip_small = False
         if min_workers is not None:
             workers = _num(row.get("workers"))
-            if workers is None or workers < min_workers:
-                continue
+            skip_small = workers is None or workers < min_workers
         base = baseline.get(key)
         if base is None:
             continue
         for metric in spec.get("higher", ()):
+            if skip_small and metric not in exempt:
+                continue
             fresh_v, base_v = _num(row.get(metric)), _num(base.get(metric))
             if fresh_v is None or base_v is None or base_v <= 0:
                 continue
@@ -115,6 +138,8 @@ def check_bench(name, spec, baseline_rows, fresh_rows, slack):
                     f"baseline {base_v:.3g} / slack {slack:g}"
                 )
         for metric in spec.get("equal", ()):
+            if skip_small and metric not in exempt:
+                continue
             fresh_v, base_v = _num(row.get(metric)), _num(base.get(metric))
             if fresh_v is None or base_v is None:
                 continue

@@ -21,6 +21,8 @@ def emit(rows: List[Dict], name: str, columns: List[str]) -> None:
 
 
 def _fmt(v) -> str:
+    if v is None:                # skipped metric: null in JSON, blank in CSV
+        return ""
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)

@@ -3,9 +3,19 @@
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run detection  # one
     python benchmarks/run.py --quick                   # CI smoke subset
+    python benchmarks/run.py --only planner_scale      # one, full grid
 
 ``--quick`` sets REPRO_BENCH_QUICK=1 (benches trim their grids) and runs
 the smoke subset unless specific benches are named.
+
+``--only <bench>`` (repeatable; ``--only=<bench>`` also accepted) names
+a single bench the same way a positional name does — use it to
+re-record one baseline after a model change that only moves that
+bench's rows, e.g. ``python benchmarks/run.py --only maxplus`` after a
+kernel change, instead of regenerating the whole ``results/`` suite.
+Baselines land wherever ``REPRO_RESULTS`` points (default
+``results/``); commit the refreshed JSON so the CI regression gate
+(``benchmarks/check_regression.py``) compares against it.
 """
 from __future__ import annotations
 
@@ -30,10 +40,31 @@ QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
 def main() -> None:
     args = sys.argv[1:]
     quick = "--quick" in args
-    unknown = [a for a in args if a.startswith("--") and a != "--quick"]
+    names, only, expect_only = [], [], False
+    unknown = []
+    for a in args:
+        if expect_only:
+            only.append(a)
+            expect_only = False
+        elif a == "--only":
+            expect_only = True
+        elif a.startswith("--only="):
+            only.append(a.split("=", 1)[1])
+        elif a == "--quick":
+            pass
+        elif a.startswith("--"):
+            unknown.append(a)
+        else:
+            names.append(a)
+    if expect_only:
+        sys.exit("--only needs a bench name (e.g. --only planner_scale)")
     if unknown:
-        sys.exit(f"unknown flags: {unknown} (only --quick is supported)")
-    names = [a for a in args if not a.startswith("--")]
+        sys.exit(f"unknown flags: {unknown} "
+                 f"(supported: --quick, --only <bench>)")
+    bad = [b for b in names + only if b not in BENCHES]
+    if bad:
+        sys.exit(f"unknown benches: {bad} (choose from {BENCHES})")
+    names += only
     if quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"
     if not names:

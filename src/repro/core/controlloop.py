@@ -38,6 +38,13 @@ class LoopEvent:
     action: Action
     plan: Optional[Tuple[int, ...]] = None
     plan_latency_s: Optional[float] = None   # dispatch latency (lookup/solve)
+    # batched planner-engine counters at event time (cumulative
+    # coordinator.PlanStats values: level sweeps, stacked kernel
+    # launches, lazily materialized tracebacks); None when the event
+    # produced no plan or the coordinator runs a non-batched plan engine
+    plan_levels: Optional[int] = None
+    plan_launches: Optional[int] = None
+    plan_tracebacks: Optional[int] = None
 
 
 class ControlLoop:
@@ -50,6 +57,19 @@ class ControlLoop:
         self.events: List[LoopEvent] = []
         self._seen: set = set()
         self._case_seq = 0
+
+    def _stamped(self, ev: LoopEvent) -> LoopEvent:
+        """Stamp plan-producing events with the coordinator's cumulative
+        batched-engine counters (like ``plan_latency_s``, a point-in-time
+        read of ``PlanStats``).  Non-batched plan engines have no such
+        counters — those events stay None rather than reading as
+        zero-cost batched dispatches in mixed-engine logs."""
+        if ev.plan is not None and self.coord.plan_engine == "batched":
+            ps = self.coord.plan_stats
+            ev.plan_levels = ps.batched_levels
+            ev.plan_launches = ps.batched_launches
+            ev.plan_tracebacks = ps.lazy_tracebacks
+        return ev
 
     # ---- one tick of the loop ---------------------------------------------
 
@@ -130,9 +150,9 @@ class ControlLoop:
                 task, self.cluster.healthy_workers(),
                 avg_iter_s=rec.get("avg_iter_s", 30.0))
             self.cluster.assign(list(plan.assignment))
-            out.append(LoopEvent(now, rec["node"], None, Action.RESUME,
-                                 plan.assignment,
-                                 self.coord.plan_stats.last_dispatch_s))
+            out.append(self._stamped(LoopEvent(
+                now, rec["node"], None, Action.RESUME, plan.assignment,
+                self.coord.plan_stats.last_dispatch_s)))
         return out
 
     def _rejoin_repaired(self, now: float) -> List[LoopEvent]:
@@ -147,10 +167,10 @@ class ControlLoop:
                     self.cluster.healthy_workers(),
                     trigger=Trigger.NODE_JOIN)
                 self.cluster.assign(list(plan.assignment))
-                out.append(LoopEvent(
+                out.append(self._stamped(LoopEvent(
                     now, node.node_id, ErrorKind.LOST_CONNECTION,
                     Action.RESUME, plan.assignment,
-                    self.coord.plan_stats.last_dispatch_s))
+                    self.coord.plan_stats.last_dispatch_s)))
         return out
 
     # ---- decision path -----------------------------------------------------
@@ -170,7 +190,8 @@ class ControlLoop:
             plan = p.assignment
             plan_s = self.coord.plan_stats.last_dispatch_s
         self.coord.close_case(case_id)
-        return LoopEvent(now, node, kind, decision.action, plan, plan_s)
+        return self._stamped(LoopEvent(now, node, kind, decision.action,
+                                       plan, plan_s))
 
     # ---- task churn entry points (Figure 7 triggers 5 and 6) --------------
 
@@ -178,9 +199,9 @@ class ControlLoop:
         plan = self.coord.task_finished(task_index,
                                         self.cluster.healthy_workers())
         self.cluster.assign(list(plan.assignment))
-        return LoopEvent(now, -1, None, Action.RESUME,
-                         plan.assignment,
-                         self.coord.plan_stats.last_dispatch_s)
+        return self._stamped(LoopEvent(
+            now, -1, None, Action.RESUME, plan.assignment,
+            self.coord.plan_stats.last_dispatch_s))
 
     def task_finished(self, now: float, task_index: int) -> LoopEvent:
         """A task completed: free its workers and replan the remainder.
@@ -197,9 +218,9 @@ class ControlLoop:
                                         self.cluster.healthy_workers(),
                                         avg_iter_s=avg_iter_s)
         self.cluster.assign(list(plan.assignment))
-        ev = LoopEvent(now, -1, None, Action.RESUME,
-                       plan.assignment,
-                       self.coord.plan_stats.last_dispatch_s)
+        ev = self._stamped(LoopEvent(
+            now, -1, None, Action.RESUME, plan.assignment,
+            self.coord.plan_stats.last_dispatch_s))
         self.events.append(ev)
         return ev
 
@@ -223,6 +244,7 @@ class ControlLoop:
             plan = p.assignment
             plan_s = self.coord.plan_stats.last_dispatch_s
         self.coord.close_case(case_id)
-        ev = LoopEvent(now, node, kind, decision.action, plan, plan_s)
+        ev = self._stamped(LoopEvent(now, node, kind, decision.action,
+                                     plan, plan_s))
         self.events.append(ev)
         return ev

@@ -34,7 +34,15 @@ class TaskEntry:
 class PlanStats:
     """Planner-engine accounting: how long plan generation takes and how
     often failure-time dispatch was an O(1) table hit (the §5.2 claim the
-    vectorized engine has to uphold at scale)."""
+    vectorized engine has to uphold at scale).
+
+    The ``batched_*``/``lazy_tracebacks`` counters mirror the batched
+    PlanTable engine's ``batch_stats``: tree/complement levels merged,
+    stacked max-plus kernel launches issued, and plans materialized by
+    on-demand argmax traceback.  They accumulate the deltas observed
+    through THIS coordinator's table handle — under a cache-shared table
+    another coordinator's work lands on whichever handle reads it first,
+    so sums over all coordinators remain exact."""
     table_rebuilds: int = 0
     table_rebuild_s: float = 0.0       # cumulative
     last_rebuild_s: float = 0.0
@@ -44,6 +52,9 @@ class PlanStats:
     last_dispatch_s: float = 0.0       # latency of the last plan_for()
     task_launches: int = 0
     task_finishes: int = 0
+    batched_levels: int = 0            # level-synchronous merge sweeps
+    batched_launches: int = 0          # stacked max-plus kernel launches
+    lazy_tracebacks: int = 0           # plans materialized by traceback
 
 
 class UnicronCoordinator:
@@ -54,7 +65,8 @@ class UnicronCoordinator:
                  plan_cache: Optional[planner.PlannerCache] = None,
                  n_cluster_workers: Optional[int] = None,
                  workers_per_node: int = 8,
-                 plan_engine: str = "segtree"):
+                 plan_engine: str = "batched",
+                 prebuild_scenarios: bool = False):
         """``plan_cache``: share a ``PlannerCache`` across coordinators —
         plan tables become lazy (scenarios assembled on first lookup) and
         rows/prefix-suffix DPs/solves are reused across rebuilds, with
@@ -67,12 +79,22 @@ class UnicronCoordinator:
         once for that capacity, which keeps plan values comparable (and
         cache keys identical) across rebuilds at different totals.
 
-        ``plan_engine``: incremental PlanTable engine — ``"segtree"``
-        (dyadic segment tree, O(log m) churn invalidation, banded
-        convolutions where tasks carry ``max_workers`` caps) or
-        ``"chain"`` (the PR-2 prefix/suffix chains)."""
+        ``plan_engine``: incremental PlanTable engine — ``"batched"``
+        (default: level-synchronous stacked merges, value-only assembly,
+        lazy traceback), ``"segtree"`` (dyadic segment tree, O(log m)
+        churn invalidation, one kernel call per merge) or ``"chain"``
+        (the PR-2 prefix/suffix chains).
+
+        ``prebuild_scenarios``: run the whole-table value rebuild on
+        every plan-table refresh (including the churn triggers, where the
+        task set shifts and ANY scenario may fire next) — on the batched
+        engine a constant number of stacked launches per tree level, so
+        every subsequent dispatch is a memo read plus one lazy traceback.
+        Off by default: the Monte-Carlo engines keep lazy tables (most
+        intermediate states are never consulted)."""
         self.hw = hw
         self.plan_engine = plan_engine
+        self.prebuild_scenarios = prebuild_scenarios
         self.kv = kv or KVStore()
         self.entries: List[TaskEntry] = [
             TaskEntry(task=t, n_workers=x,
@@ -88,6 +110,12 @@ class UnicronCoordinator:
         self._tids: Optional[Tuple[int, ...]] = None   # interned task ids
         self._intern_tasks()
         self.plan_stats = PlanStats()
+        # batched-engine counter baseline: the table handle last synced
+        # and its batch_stats snapshot at that point (cache-shared tables
+        # may arrive pre-warmed; only deltas seen through this handle
+        # count toward plan_stats)
+        self._bstats_src: Optional[PlanTable] = None
+        self._bstats_seen: Dict[str, int] = {}
         self.plan_epoch = 0
         self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
         self.refresh_plan_table()
@@ -109,6 +137,34 @@ class UnicronCoordinator:
     def _d_running(self, n_workers: int) -> float:
         return waf_mod.expected_run_duration(self.n_cluster or n_workers,
                                              self.mtbf)
+
+    def _adopt_table(self, table: Optional[PlanTable],
+                     fresh: bool) -> None:
+        """Set the batched-counter baseline for a newly acquired table
+        handle: zeros when this coordinator just built it (all its work
+        is ours), the current snapshot when it came warm out of a shared
+        cache (prior work belongs to whoever did it)."""
+        stats = getattr(table, "batch_stats", None)
+        if stats is None or self._bstats_src is table:
+            return
+        self._bstats_src = table
+        self._bstats_seen = ({k: 0 for k in stats} if fresh
+                             else dict(stats))
+
+    def _sync_batch_stats(self) -> None:
+        """Fold the table's batched-engine counters into ``plan_stats``
+        (delta since this coordinator last read this table handle)."""
+        table = self._table
+        stats = getattr(table, "batch_stats", None)
+        if stats is None or self._bstats_src is not table:
+            return
+        seen = self._bstats_seen
+        self.plan_stats.batched_levels += stats["levels"] - seen["levels"]
+        self.plan_stats.batched_launches += (stats["launches"]
+                                             - seen["launches"])
+        self.plan_stats.lazy_tracebacks += (stats["tracebacks"]
+                                            - seen["tracebacks"])
+        self._bstats_seen = dict(stats)
 
     # ---- plan generation -------------------------------------------------
 
@@ -140,12 +196,17 @@ class UnicronCoordinator:
                                                 n_budget=n_budget,
                                                 engine=self.plan_engine,
                                                 task_ids=self._tids)
+            self._adopt_table(self._table, fresh=False)
         else:
             self._table = PlanTable(tasks, assignment, self.hw, d_run,
                                     self.d_transition,
                                     workers_per_fault=w,
                                     n_budget=n_budget,
                                     engine=self.plan_engine)
+            self._adopt_table(self._table, fresh=True)
+        if self.prebuild_scenarios:
+            self._table.rebuild_values()
+        self._sync_batch_stats()
         dt = time.perf_counter() - t0
         self.plan_stats.table_rebuilds += 1
         self.plan_stats.table_rebuild_s += dt
@@ -157,6 +218,7 @@ class UnicronCoordinator:
         t0 = time.perf_counter()
         if lookup_key and self._table:
             hit = self._table.lookup(lookup_key)
+            self._sync_batch_stats()
             if hit is not None:
                 self.plan_stats.lookup_hits += 1
                 self.plan_stats.last_dispatch_s = time.perf_counter() - t0
@@ -231,6 +293,7 @@ class UnicronCoordinator:
         plan = None
         if self._table is not None:
             cand = self._table.lookup(f"finish:{task_index}")
+            self._sync_batch_stats()
             if cand is not None and sum(cand.assignment) <= n_workers_now:
                 plan = cand
                 self.plan_stats.lookup_hits += 1

@@ -28,39 +28,74 @@ share the candidate set (``prev[j-k] + g[k]``), so their maxima agree:
   band (reward rows of tasks with ``Task.max_workers`` caps are; so are
   span value vectors past the sum of their tasks' caps) — the banded
   output is then bitwise-identical to the dense one.
-* ``kernels.maxplus.maxplus_conv`` — Pallas TPU kernel (interpret on
-  CPU/GPU, compiled via Mosaic on TPU), float32.  Selected with the
-  backend switch: ``set_maxplus_backend("pallas")`` or
+* ``_maxplus_vals_fused_batched`` — stacked (B, n+1) variant of the
+  fused kernel with a *per-row* band: one call evaluates B independent
+  convolutions, each row bitwise-identical to the 2-D fused kernel on
+  its own (prev, g, band) slice.  The batched engine's workhorse.
+* ``kernels.maxplus.maxplus_conv`` / ``maxplus_conv_batched`` — Pallas
+  TPU kernels (interpret on CPU/GPU, compiled via Mosaic on TPU),
+  float32; the batched variant puts the stack axis on the Pallas grid.
+  Selected with the backend switch: ``set_maxplus_backend("pallas")`` or
   ``REPRO_PLANNER_BACKEND=pallas``; default stays ``numpy`` (float64).
 
-Segment-tree incremental engine
--------------------------------
+Incremental engine matrix
+-------------------------
 ``PlanTable`` precomputes the one-step lookahead lookup table the paper
-uses for O(1) dispatch at failure time.  Two incremental engines build it:
+uses for O(1) dispatch at failure time.  Three incremental engines build
+it (mirroring the scalar -> vector -> batched simulator matrix):
 
-* ``engine="segtree"`` (default) — a dyadic segment tree over task
-  positions.  Each node stores the max-plus merge V[lo, hi) of its span's
+* ``engine="chain"`` — the PR-2 prefix/suffix DP chains: P[i]/T[i] value
+  vectors, each scenario assembled from <= 2 extra convolutions, a churn
+  step invalidates the O(m) chain tail past the change.  Kept unchanged
+  as the measured churn-rebuild baseline (``bench_planner_scale``).
+* ``engine="segtree"`` — a dyadic segment tree over task positions
+  (PR 3).  Each node stores the max-plus merge V[lo, hi) of its span's
   reward rows (leaves are running maxima, internal nodes one banded
   convolution of their children), and every scenario assembles from
   O(log m) cached node merges: ``join`` reads the root, ``finish:i`` the
   complement chain C(i) = merge of i's root-path siblings, ``fault:i``
   one extra banded convolution of C(i) with the fault row.  A churn step
-  that changes one task's reward row therefore invalidates only the
-  O(log m) nodes on its root path (plus the complements crossing it)
-  instead of the O(m) prefix/suffix chain tail.
-* ``engine="chain"`` — the PR-2 prefix/suffix DP chains, kept unchanged
-  as the churn-rebuild speedup baseline (``bench_planner_scale``).
+  that changes one task's reward row invalidates only the O(log m) nodes
+  on its root path (plus the complements crossing it) — but every node
+  merge and every chain link is still its own Python-dispatched kernel
+  call, and every ``lookup`` pays an O(m) argmax traceback.
+* ``engine="batched"`` (default) — the level-synchronous batched engine
+  on the same dyadic tree, three upgrades over ``segtree``:
+
+  1. *Level-stacked merges*: tree nodes are grouped by depth and each
+     level's merges run as ONE stacked banded max-plus call
+     (``_maxplus_vals_fused_batched``), so a whole-tree build is
+     O(log m) kernel launches instead of O(m) Python-driven calls.
+  2. *Shared complement sweep*: the m ``fault:i``/``finish:i``
+     complement chains overlap in O(m) distinct nodes — one top-down
+     level-parallel sweep computes the complement vector of EVERY tree
+     node (Comp(child) = Comp(parent) (+) V(sibling), all children of a
+     level in one stacked call), then all m fault combines run as one
+     more stacked call.  A whole-table value rebuild is therefore a
+     constant number of batched launches per tree level.
+  3. *Value-only assembly + lazy traceback*: ``rebuild_values()`` /
+     ``scenario_total()`` materialize every scenario's value vector and
+     total reward but NO assignments; the O(m) argmax traceback runs
+     only for the scenario a ``lookup`` actually dispatches.
+
+  All three engines reduce identical candidate sets with exact
+  order-free maxima, so their plans are float-identical.
 
 With ``lazy=True`` scenarios (and the node merges feeding them) are
 assembled on first ``lookup``; with a ``PlannerCache`` reward rows and
 node/chain vectors are keyed by their span *contents* and reused across
 rebuilds, and a recurring cluster state is a whole-table hit.  The
-churn-heavy cluster simulator (``core.simulator.VectorSimulator``) is the
-main consumer.
+churn-heavy cluster simulators (``core.simulator.VectorSimulator`` /
+``BatchSimulator``) are the main consumers; their cold Monte-Carlo walls
+are planner-dispatch-bound, which is what the batched engine's
+constant-launch rebuilds attack (``bench_planner_scale``'s whole-table
+churn axis measures it directly).
 
 ``brute_force`` is an exponential reference used by the property tests.
 Regenerate the committed benchmark baselines (``results/bench_*.json``)
-with ``python benchmarks/run.py`` after any reward-model change here.
+with ``python benchmarks/run.py`` after any reward-model change here
+(``python benchmarks/run.py --only planner_scale`` re-records a single
+bench after a planner-only change).
 """
 from __future__ import annotations
 
@@ -224,6 +259,84 @@ def _maxplus_vals_fused(prev: np.ndarray, g: np.ndarray,
     return out
 
 
+def _maxplus_kloop_stack(prev: np.ndarray, g: np.ndarray,
+                         bs: np.ndarray) -> np.ndarray:
+    """Shift-slab evaluation of a stacked banded convolution: one
+    iteration per candidate offset k, each a fused add + in-place max
+    over the whole contiguous (B, n+1) slab.
+
+    out[r, j] = max_{0 <= k <= min(j, bs[r])} prev[r, j-k] + g[r, k]
+
+    Per-row bands are applied by masking g past each row's band to -inf
+    (a masked candidate never beats the finite k=0 candidate); k > j
+    candidates fall into the -inf pad.  Max is an exact order-free
+    reduction over the same ``prev[r, j-k] + g[r, k]`` floats as the 2-D
+    fused kernel, so rows are bitwise identical to per-slice calls."""
+    B, n1 = prev.shape
+    bmax = int(bs.max())
+    pad = np.concatenate([np.full((B, bmax), NEG), prev], axis=1)
+    gm = g
+    if (bs < bmax).any():
+        gm = np.where(np.arange(n1)[None, :] > bs[:, None], NEG, g)
+    out = np.full((B, n1), NEG)
+    tmp = np.empty((B, n1))
+    for k in range(bmax + 1):
+        np.add(pad[:, bmax - k: bmax - k + n1], gm[:, k:k + 1], out=tmp)
+        np.maximum(out, tmp, out=out)
+    return out
+
+
+def _maxplus_vals_fused_batched(prev: np.ndarray, g: np.ndarray,
+                                bands=None) -> np.ndarray:
+    """Stacked banded max-plus convolution: B independent rows at once.
+
+    ``prev`` and ``g`` are (B, n+1); ``bands`` is a per-row band sequence
+    (``None`` entries = dense).  Row r of the output is **bitwise
+    identical** to ``_maxplus_vals_fused(prev[r], g[r], band=bands[r])``:
+    every path below reduces exactly row r's candidate set with exact
+    order-free maxima.
+
+    One call replaces a Python loop of B 2-D kernel calls — the
+    per-level launch of the ``engine="batched"`` PlanTable.  Like the
+    2-D kernel's orientation adaptivity, the evaluation strategy follows
+    the shape: rows are bucketed by band (each bucket spans at most a 2x
+    band spread, bounding masked-candidate waste), narrow buckets run as
+    shift-slab stacks whose Python-loop count is the band instead of the
+    batch (``_maxplus_kloop_stack``), and wide/dense buckets — where one
+    row's candidate matrix already saturates the memory system and
+    stacking only thrashes it — fall through to the tiled 2-D kernel per
+    row."""
+    prev = np.asarray(prev, dtype=float)
+    g = np.asarray(g, dtype=float)
+    B, n1 = prev.shape
+    n = n1 - 1
+    if bands is None:
+        bs = np.full(B, n, dtype=np.int64)
+    else:
+        bs = np.array([n if b is None else max(0, min(int(b), n))
+                       for b in bands], dtype=np.int64)
+    out = np.empty((B, n1))
+    order = np.argsort(bs, kind="stable")
+    start = 0
+    while start < B:
+        stop = start + 1
+        floor = bs[order[start]]
+        while (stop < B
+               and bs[order[stop]] + 1 <= 2 * (floor + 1)):
+            stop += 1
+        rows = order[start:stop]
+        bmax = int(bs[rows[-1]])
+        if bmax + 1 <= 4 * len(rows):      # narrow bucket: slab stack
+            out[rows] = _maxplus_kloop_stack(prev[rows], g[rows],
+                                             bs[rows])
+        else:                              # wide/dense: per-row tiles
+            for r in rows:
+                out[r] = _maxplus_vals_fused(prev[r], g[r],
+                                             band=int(bs[r]))
+        start = stop
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Max-plus backend switch: numpy (float64, default) or the Pallas kernel
 # (kernels.maxplus.maxplus_conv, float32; interpret off-TPU).
@@ -264,6 +377,18 @@ def _conv_vals(prev: np.ndarray, g: np.ndarray,
         from repro.kernels.maxplus import maxplus_conv
         return np.asarray(maxplus_conv(prev, g, band=band), dtype=float)
     return _maxplus_vals_fused(prev, g, band)
+
+
+def _conv_vals_batched(prev: np.ndarray, g: np.ndarray,
+                       bands) -> np.ndarray:
+    """Backend-dispatched stacked banded max-plus kernel (the batched
+    engine's per-level launch): numpy float64 by default, the
+    grid-batched Pallas kernel (float32) under the same
+    ``REPRO_PLANNER_BACKEND=pallas`` switch as the 2-D path."""
+    if get_maxplus_backend() == "pallas":
+        from repro.kernels.maxplus import maxplus_conv_batched
+        return np.asarray(maxplus_conv_batched(prev, g, bands), dtype=float)
+    return _maxplus_vals_fused_batched(prev, g, bands)
 
 
 def _argmax_at(prev: np.ndarray, g: np.ndarray, j: int) -> int:
@@ -382,14 +507,21 @@ class PlanTable:
       join:1    combine(P[m//2], T[m//2])             (1 convolution)
       finish:i  combine(P[i], T[i+1])                 (1 convolution)
 
-    ``lazy=True`` defers scenario assembly (and the P/T chains feeding it)
-    to the first ``lookup`` of each key: a table consulted for one scenario
-    before the cluster state changes again only pays for that scenario.
-    A ``PlannerCache`` shares rows and P/T chains *across* rebuilds.
+    ``lazy=True`` defers scenario assembly (and the node merges / chains
+    feeding it) to the first ``lookup`` of each key: a table consulted for
+    one scenario before the cluster state changes again only pays for that
+    scenario.  A ``PlannerCache`` shares rows and node/chain vectors
+    *across* rebuilds.  The batched engine additionally separates values
+    from assignments: ``rebuild_values()`` materializes every scenario's
+    total in a constant number of stacked kernel launches per tree level,
+    and the O(m) argmax traceback runs only for keys ``lookup`` actually
+    dispatches.
 
     ``incremental=False`` retains the original scenario-by-scenario full
     solves (the reference path the tests and benchmarks compare against).
     """
+
+    ENGINES = ("batched", "segtree", "chain")
 
     def __init__(self, tasks: Sequence[Task], assignment: Sequence[int],
                  hw: Hardware, d_running: float, d_transition: float,
@@ -397,23 +529,26 @@ class PlanTable:
                  solver=None, lazy: bool = False,
                  cache: Optional["PlannerCache"] = None,
                  n_budget: Optional[int] = None,
-                 engine: str = "segtree"):
+                 engine: str = "batched"):
         """``incremental=False`` falls back to one full solve per scenario;
         ``solver`` then picks the per-scenario solver (default ``solve``;
         pass ``solve_reference`` for the all-scalar baseline).
 
-        ``engine``: ``"segtree"`` (dyadic segment tree over task
-        positions, O(log m) invalidation per churn step, banded
-        convolutions where caps allow) or ``"chain"`` (the PR-2
-        prefix/suffix DP chains, kept as the churn-rebuild baseline).
+        ``engine``: ``"batched"`` (default; level-synchronous stacked
+        merges, shared complement sweep, value-only assembly with lazy
+        traceback), ``"segtree"`` (the PR-3 per-node dyadic tree,
+        O(log m) invalidation per churn step, one kernel call per merge)
+        or ``"chain"`` (the PR-2 prefix/suffix DP chains, kept as the
+        churn-rebuild baseline).
 
         ``n_budget``: size the DP value arrays for this many workers (>=
         the largest scenario budget).  Plans are unchanged — every
         scenario argmax is sliced to its own budget — but a *fixed*
         budget (e.g. cluster capacity + one node) keeps chain-cache keys
         and array shapes identical across rebuilds at different totals."""
-        if engine not in ("segtree", "chain"):
-            raise ValueError(f"unknown PlanTable engine {engine!r}")
+        if engine not in self.ENGINES:
+            raise ValueError(f"unknown PlanTable engine {engine!r}; "
+                             f"choose from {self.ENGINES}")
         self.tasks = tuple(tasks)
         self.assignment = tuple(assignment)
         self.hw = hw
@@ -425,12 +560,19 @@ class PlanTable:
         self._solver = solver or solve
         self._cache = cache
         self.table: Dict[str, Plan] = {}
+        # batched-engine accounting (zeros for the other engines):
+        # tree/complement levels merged, stacked kernel launches issued,
+        # plans materialized by on-demand traceback.
+        self.batch_stats: Dict[str, int] = {"levels": 0, "launches": 0,
+                                            "tracebacks": 0}
         self._incremental = (incremental and solver is None
                              and len(self.tasks) > 0
                              and _vector_capable(self.tasks))
         if self._incremental:
             self._init_incremental()
             if not lazy:
+                if engine == "batched":
+                    self._ensure_values()
                 for key in self.scenario_keys():
                     self.lookup(key)
         else:
@@ -491,6 +633,18 @@ class PlanTable:
         # candidate sets.
         self._conv = _maxplus_vals_fast if self._cache else _maxplus_vals
         self._V: Dict[Tuple[int, int], np.ndarray] = {}
+        self._sat_memo: Dict[Tuple[int, int], int] = {}
+        # batched engine: complement vectors per tree node (Comp(X) =
+        # merge of X's root-path siblings), their cumulative saturations
+        # and sibling paths, plus value-only scenario results
+        # (vector, argmax cell, total) pending lazy traceback.
+        self._Comp: Dict[Tuple[int, int], np.ndarray] = {}
+        self._csat: Dict[Tuple[int, int], int] = {}
+        self._csibs: Dict[Tuple[int, int], Tuple] = {}
+        self._scen: Dict[str, Tuple[np.ndarray, int, float]] = {}
+        self._level_nodes: Optional[List[List[Tuple[int, int]]]] = None
+        self._tree_built = False
+        self._values_built = False
         cache = self._cache
         if cache is not None:
             self._pairs = tuple((cache.task_id(t), x)
@@ -668,13 +822,20 @@ class PlanTable:
 
     def _sat(self, lo: int, hi: int) -> int:
         """Saturation of span [lo, hi): V[lo, hi) is flat past the sum of
-        its tasks' bands (more workers than every cap combined are idle)."""
+        its tasks' bands (more workers than every cap combined are idle).
+        Memoized per table — the level sweeps consult every node's
+        saturation repeatedly."""
+        got = self._sat_memo.get((lo, hi))
+        if got is not None:
+            return got
         s = 0
         for i in range(lo, hi):
             b = self._band(i)
             s += self._n_max if b is None else b
             if s >= self._n_max:
-                return self._n_max
+                s = self._n_max
+                break
+        self._sat_memo[(lo, hi)] = s
         return s
 
     def _vkey(self, lo: int, hi: int):
@@ -798,9 +959,7 @@ class PlanTable:
             combined = None
             fkey = None
             if self._cache is not None:
-                fkey = ("FM", self._sig,
-                        (self._pairs[:ti], self._pairs[ti + 1:]),
-                        self._pairs[ti])
+                fkey = self._fm_key(ti)
                 combined = self._cache.array(fkey)
             if combined is None:
                 combined = _conv_vals(C, frow, self._band(ti, faulted=True))
@@ -822,7 +981,411 @@ class PlanTable:
         rem = self.tasks[:ti] + self.tasks[ti + 1:]
         return Plan(tuple(assign), total, self._cwaf(rem, assign))
 
+    # ---- batched engine: level-synchronous stacked sweeps + lazy traceback -
+
+    def _fm_key(self, ti: int):
+        """Cache key of the ``fault:ti`` combined vector (cache only)."""
+        return ("FM", self._sig,
+                (self._pairs[:ti], self._pairs[ti + 1:]), self._pairs[ti])
+
+    def _levels(self) -> List[List[Tuple[int, int]]]:
+        """Dyadic tree nodes grouped by depth (root first), memoized."""
+        if self._level_nodes is None:
+            out: List[List[Tuple[int, int]]] = []
+
+            def walk(lo: int, hi: int, d: int) -> None:
+                if len(out) <= d:
+                    out.append([])
+                out[d].append((lo, hi))
+                if hi - lo > 1:
+                    mid = (lo + hi) // 2
+                    walk(lo, mid, d + 1)
+                    walk(mid, hi, d + 1)
+
+            walk(0, len(self.tasks), 0)
+            self._level_nodes = out
+        return self._level_nodes
+
+    def _launch(self, rows: List[Tuple[np.ndarray, np.ndarray,
+                                       Optional[int]]]) -> np.ndarray:
+        """One stacked kernel launch over ``rows`` of (prev, g, band).
+        A single-row level skips the stacking machinery — the 2-D kernel
+        is the identical computation (and tiny tables are all single-row
+        levels)."""
+        self.batch_stats["launches"] += 1
+        if len(rows) == 1:
+            prev, g, band = rows[0]
+            return _conv_vals(prev, g, band)[None, :]
+        prev = np.stack([r[0] for r in rows])
+        g = np.stack([r[1] for r in rows])
+        return _conv_vals_batched(prev, g, [r[2] for r in rows])
+
+    def _node_hit(self, lo: int, hi: int) -> Optional[np.ndarray]:
+        got = self._V.get((lo, hi))
+        if got is None and self._cache is not None:
+            got = self._cache.array(self._vkey(lo, hi))
+            if got is not None:
+                self._V[(lo, hi)] = got
+        return got
+
+    def _store_node(self, lo: int, hi: int, arr: np.ndarray) -> None:
+        self._V[(lo, hi)] = arr
+        if self._cache is not None:
+            self._cache.array(self._vkey(lo, hi), lambda: arr)
+
+    def _build_spans(self, roots: List[Tuple[int, int, int]]) -> None:
+        """Level-synchronous V build of the given (lo, hi, depth)
+        subtrees: descend pruning spans the cache already holds, build
+        every missing leaf as one vectorized running-max pass, then merge
+        each level's internal nodes with ONE stacked banded launch,
+        bottom-up.  Same merges, operand orders and bands as ``_vvec`` —
+        floats are identical.  Depths are global tree depths, so nodes of
+        different subtrees land in shared level launches."""
+        roots = [r for r in roots if (r[0], r[1]) not in self._V]
+        if not roots:
+            return
+        need: List[List[Tuple[int, int]]] = [[] for _ in self._levels()]
+
+        def visit(lo: int, hi: int, d: int) -> None:
+            if self._node_hit(lo, hi) is not None:
+                return
+            need[d].append((lo, hi))
+            if hi - lo > 1:
+                mid = (lo + hi) // 2
+                visit(lo, mid, d + 1)
+                visit(mid, hi, d + 1)
+
+        for lo, hi, d in roots:
+            visit(lo, hi, d)
+        leaves = [nd for lvl in need for nd in lvl if nd[1] - nd[0] == 1]
+        if leaves:
+            rows = np.stack([self._row(lo) for lo, _ in leaves])
+            acc = np.maximum.accumulate(rows, axis=1)
+            for r, (lo, hi) in enumerate(leaves):
+                self._store_node(lo, hi, acc[r])
+        for d in range(len(need) - 1, -1, -1):
+            todo = [nd for nd in need[d] if nd[1] - nd[0] > 1]
+            if not todo:
+                continue
+            stack = []
+            for lo, hi in todo:
+                mid = (lo + hi) // 2
+                left, right = self._V[(lo, mid)], self._V[(mid, hi)]
+                sl, sr = self._sat(lo, mid), self._sat(mid, hi)
+                if sl < sr:               # band by the flatter operand
+                    stack.append((right, left,
+                                  sl if sl < self._n_max else None))
+                else:
+                    stack.append((left, right,
+                                  sr if sr < self._n_max else None))
+            out = self._launch(stack)
+            self.batch_stats["levels"] += 1
+            for r, (lo, hi) in enumerate(todo):
+                self._store_node(lo, hi, out[r])
+
+    def _ensure_tree(self) -> None:
+        """Whole-tree V sweep (the join scenario and the whole-table
+        value rebuild consume every node)."""
+        if self._tree_built:
+            return
+        self._build_spans([(0, len(self.tasks), 0)])
+        self._tree_built = True
+
+    def _ensure_chain_spans(self, ti: int) -> None:
+        """Build exactly the sibling subtrees leaf ti's complement chain
+        merges — the same node set the segtree engine's recursive
+        ``_vvec`` calls would touch for this scenario, but launched per
+        level instead of per node.  Single cold dispatches therefore
+        never pay for the root-path merges only ``join`` needs."""
+        missing = [(a, b, i + 1)
+                   for i, (a, b) in enumerate(self._path_sibs(ti))
+                   if (a, b) not in self._V]
+        if missing:
+            self._build_spans(missing)
+
+    def _comp_meta(self, child: Tuple[int, int], parent: Tuple[int, int],
+                   sib: Tuple[int, int]) -> None:
+        """Sibling path and cumulative saturation of a comp-tree child."""
+        self._csibs[child] = self._csibs[parent] + (sib,)
+        self._csat[child] = min(self._csat[parent] + self._sat(*sib),
+                                self._n_max)
+
+    def _comp_root(self) -> Tuple[int, int]:
+        root = (0, len(self.tasks))
+        if root not in self._Comp:
+            self._Comp[root] = np.zeros(self._n_max + 1)
+        self._csat.setdefault(root, 0)
+        self._csibs.setdefault(root, ())
+        return root
+
+    def _total_entry(self, vec: np.ndarray,
+                     limit: int) -> Tuple[np.ndarray, int, float]:
+        j = int(np.argmax(vec[:limit + 1]))
+        return vec, j, float(vec[j])
+
+    def _ensure_values(self) -> None:
+        """Whole-table value rebuild: the complement vector of EVERY tree
+        node via one top-down level-parallel sweep (all children of a
+        level in one stacked launch — the m per-leaf chains overlap in
+        exactly these O(m) distinct nodes, so nothing is recomputed per
+        scenario), then all m fault combines in one more launch, then
+        every scenario's total.  NO argmax tracebacks — ``lookup`` runs
+        those lazily for the scenario actually dispatched."""
+        if self._values_built:
+            return
+        self._ensure_tree()
+        m = len(self.tasks)
+        self._comp_root()
+        levels = self._levels()
+        for d in range(len(levels) - 1):
+            todo, stack = [], []
+            for lo, hi in levels[d]:
+                if hi - lo == 1:
+                    continue
+                mid = (lo + hi) // 2
+                for child, sib in (((lo, mid), (mid, hi)),
+                                   ((mid, hi), (lo, mid))):
+                    self._comp_meta(child, (lo, hi), sib)
+                    if child in self._Comp:
+                        continue
+                    C = None
+                    if self._cache is not None:
+                        C = self._cache.array(
+                            self._ckey(self._csibs[child]))
+                    if C is not None:
+                        self._Comp[child] = C
+                        continue
+                    satc = self._csat[(lo, hi)]
+                    sat_v = self._sat(*sib)
+                    if satc < sat_v:      # band by the flatter operand
+                        stack.append((self._vvec(*sib), self._Comp[(lo, hi)],
+                                      satc if satc < self._n_max else None))
+                    else:
+                        stack.append((self._Comp[(lo, hi)], self._vvec(*sib),
+                                      sat_v if sat_v < self._n_max else None))
+                    todo.append(child)
+            if todo:
+                out = self._launch(stack)
+                self.batch_stats["levels"] += 1
+                for r, child in enumerate(todo):
+                    arr = out[r]
+                    self._Comp[child] = arr
+                    if self._cache is not None:
+                        self._cache.array(self._ckey(self._csibs[child]),
+                                          lambda a=arr: a)
+        todo, stack = [], []
+        for ti in range(m):
+            key = f"fault:{ti}"
+            if key in self._scen:
+                continue
+            combined = None
+            if self._cache is not None:
+                combined = self._cache.array(self._fm_key(ti))
+            if combined is not None:
+                self._scen[key] = self._total_entry(combined, self._n_fault)
+                continue
+            stack.append((self._Comp[(ti, ti + 1)],
+                          self._row(ti, faulted=True),
+                          self._band(ti, faulted=True)))
+            todo.append(ti)
+        if todo:
+            out = self._launch(stack)
+            for r, ti in enumerate(todo):
+                arr = out[r]
+                if self._cache is not None:
+                    self._cache.array(self._fm_key(ti), lambda a=arr: a)
+                self._scen[f"fault:{ti}"] = self._total_entry(
+                    arr, self._n_fault)
+        for ti in range(m):
+            self._scen.setdefault(f"finish:{ti}", self._total_entry(
+                self._Comp[(ti, ti + 1)], self._n_now))
+        self._scen.setdefault("join:1", self._total_entry(
+            self._vvec(0, m), self._n_join))
+        self._values_built = True
+
+    def _chain_batched(self, ti: int):
+        """(sibs, Cs) complement chain of leaf ti, reading the level-sweep
+        store and computing (and storing) only missing links — the
+        single-dispatch path shares every vector with the whole-table
+        sweep (same operands, orders and bands: identical floats).
+
+        Like the segtree engine's chain, a cached link costs nothing:
+        the sibling V subtrees are only built — one stacked level launch
+        per level, restricted to the missing siblings — past the longest
+        already-known chain prefix."""
+        sibs = self._path_sibs(ti)
+        path = [self._comp_root()]
+        for a, b in sibs:
+            lo, hi = path[-1]
+            mid = (lo + hi) // 2
+            path.append((lo, mid) if (a, b) == (mid, hi) else (mid, hi))
+        Cs = [self._Comp[path[0]]]
+        known = 0
+        for i, (sib, child) in enumerate(zip(sibs, path[1:])):
+            self._comp_meta(child, path[i], sib)
+            C = self._Comp.get(child)
+            if C is None and self._cache is not None:
+                C = self._cache.array(self._ckey(self._csibs[child]))
+                if C is not None:
+                    self._Comp[child] = C
+            if C is None:
+                break
+            Cs.append(C)
+            known = i + 1
+        if known == len(sibs):
+            return sibs, Cs
+        self._build_spans([(a, b, i + 1)
+                           for i, (a, b) in enumerate(sibs)
+                           if i >= known and (a, b) not in self._V])
+        for i in range(known, len(sibs)):
+            a, b = sibs[i]
+            child = path[i + 1]
+            self._comp_meta(child, path[i], (a, b))
+            C = self._Comp.get(child)
+            if C is None and self._cache is not None:
+                C = self._cache.array(self._ckey(self._csibs[child]))
+            if C is None:
+                satc = self._csat[path[i]]
+                sat_v = self._sat(a, b)
+                if satc < sat_v:          # band by the flatter operand
+                    C = _conv_vals(self._vvec(a, b), Cs[-1],
+                                   satc if satc < self._n_max else None)
+                else:
+                    C = _conv_vals(Cs[-1], self._vvec(a, b),
+                                   sat_v if sat_v < self._n_max else None)
+                if self._cache is not None:
+                    self._cache.array(self._ckey(self._csibs[child]),
+                                      lambda: C)
+            self._Comp[child] = C
+            Cs.append(C)
+        return sibs, Cs
+
+    def _fault_combined(self, ti: int, C: np.ndarray) -> np.ndarray:
+        """``fault:ti`` combined vector: C(leaf ti) (+) fault-row, cache
+        -shared with the whole-table sweep."""
+        combined = None
+        if self._cache is not None:
+            combined = self._cache.array(self._fm_key(ti))
+        if combined is None:
+            combined = _conv_vals(C, self._row(ti, faulted=True),
+                                  self._band(ti, faulted=True))
+            if self._cache is not None:
+                self._cache.array(self._fm_key(ti), lambda: combined)
+        return combined
+
+    def _parse_leaf_key(self, key: str) -> Optional[Tuple[str, int]]:
+        kind, _, idx = key.partition(":")
+        if kind not in ("fault", "finish") or not idx.isdigit():
+            return None
+        ti = int(idx)
+        if not 0 <= ti < len(self.tasks):
+            return None
+        return kind, ti
+
+    def _scen_entry(self, key: str
+                    ) -> Optional[Tuple[np.ndarray, int, float]]:
+        """Value-only scenario result (vector, argmax cell, total): from
+        the whole-table sweep when built, else assembled for this key
+        alone (single dispatches stay O(chain), not O(table))."""
+        got = self._scen.get(key)
+        if got is not None:
+            return got
+        if key == "join:1":
+            self._ensure_tree()
+            entry = self._total_entry(self._vvec(0, len(self.tasks)),
+                                      self._n_join)
+        else:
+            parsed = self._parse_leaf_key(key)
+            if parsed is None:
+                return None
+            kind, ti = parsed
+            _, Cs = self._chain_batched(ti)
+            if kind == "finish":
+                entry = self._total_entry(Cs[-1], self._n_now)
+            else:
+                entry = self._total_entry(self._fault_combined(ti, Cs[-1]),
+                                          self._n_fault)
+        self._scen[key] = entry
+        return entry
+
+    def _assemble_batched(self, key: str) -> Optional[Plan]:
+        """Materialize one scenario's Plan: value vectors from the batched
+        store, then the lazy argmax traceback for just this key."""
+        m = len(self.tasks)
+        if key == "join:1":
+            entry = self._scen_entry(key)
+            vec, j, total = entry
+            self.batch_stats["tracebacks"] += 1
+            assign = [0] * m
+            self._walk_span(0, m, j, assign)
+            return Plan(tuple(assign), total,
+                        self._cwaf(self.tasks, assign))
+        parsed = self._parse_leaf_key(key)
+        if parsed is None:
+            return None
+        kind, ti = parsed
+        sibs, Cs = self._chain_batched(ti)
+        entry = self._scen.get(key)
+        if entry is None:
+            if kind == "finish":
+                entry = self._total_entry(Cs[-1], self._n_now)
+            else:
+                entry = self._total_entry(self._fault_combined(ti, Cs[-1]),
+                                          self._n_fault)
+            self._scen[key] = entry
+        vec, j, total = entry
+        self.batch_stats["tracebacks"] += 1
+        # the argmax walks descend every sibling subtree, so build them
+        # (level-launched; usually warm) even when the chain was cached
+        self._ensure_chain_spans(ti)
+        assign = [0] * m
+        if kind == "fault":
+            k = _argmax_at(Cs[-1], self._row(ti, faulted=True), j)
+            assign[ti] = k
+            self._walk_compl(sibs, Cs, j - k, assign)
+            return Plan(tuple(assign), total,
+                        self._cwaf(self.tasks, assign))
+        self._walk_compl(sibs, Cs, j, assign)
+        del assign[ti]
+        rem = self.tasks[:ti] + self.tasks[ti + 1:]
+        return Plan(tuple(assign), total, self._cwaf(rem, assign))
+
+    def rebuild_values(self) -> Dict[str, float]:
+        """Whole-table batched rebuild (batched engine): every scenario's
+        value vector and total reward in a constant number of stacked
+        launches per tree level, with NO assignment tracebacks.  Returns
+        ``{scenario key: total reward}``.  The other engines (and the
+        reference path) fall back to materializing every plan — that per
+        -scenario cost is exactly what the whole-table churn benchmark
+        measures against."""
+        if self.engine == "batched" and self._incremental:
+            self._ensure_values()
+            return {k: self._scen[k][2] for k in self.scenario_keys()}
+        out: Dict[str, float] = {}
+        for k in self.scenario_keys():
+            plan = self.lookup(k)
+            if plan is not None:
+                out[k] = plan.total_reward
+        return out
+
+    def scenario_total(self, key: str) -> Optional[float]:
+        """Total reward of one scenario without materializing its
+        assignment.  Batched engine: triggers the whole-table value
+        sweep (totals are a batched product; single dispatches should
+        use ``lookup``).  The other engines assemble the full plan."""
+        if self.engine == "batched" and self._incremental:
+            hit = self.table.get(key)
+            if hit is not None:
+                return hit.total_reward
+            self._ensure_values()
+            entry = self._scen.get(key)
+            return None if entry is None else entry[2]
+        plan = self.lookup(key)
+        return None if plan is None else plan.total_reward
+
     def _assemble(self, key: str) -> Optional[Plan]:
+        if self.engine == "batched":
+            return self._assemble_batched(key)
         if self.engine == "segtree":
             return self._assemble_segtree(key)
         return self._assemble_chain(key)
@@ -907,24 +1470,33 @@ class PlannerCache:
               hw: Hardware, d_running: float, d_transition: float,
               workers_per_fault: int = 8,
               n_budget: Optional[int] = None,
-              engine: str = "segtree",
-              task_ids: Optional[Tuple[int, ...]] = None) -> PlanTable:
+              engine: str = "batched",
+              task_ids: Optional[Tuple[int, ...]] = None,
+              prebuild: bool = False) -> PlanTable:
         """A lazy PlanTable for this cluster state, memoized by state.
         ``task_ids``: the already-interned ``task_id`` tuple for ``tasks``
         (callers that refresh per event keep it across rebuilds — the
-        task set only changes on churn)."""
+        task set only changes on churn).  ``prebuild=True`` runs the
+        whole-table value rebuild before returning (idempotent; on the
+        batched engine a constant number of stacked launches per tree
+        level, value-only — no tracebacks): churn-driven coordinators use
+        it to restore O(1)-ish dispatch for every scenario after a task
+        set change."""
         tasks, assignment = tuple(tasks), tuple(assignment)
         if task_ids is None:
             task_ids = tuple(self.task_id(t) for t in tasks)
         key = (task_ids, assignment, hw,
                d_running, d_transition, workers_per_fault, n_budget,
                engine)
-        return self._memo(
+        table = self._memo(
             self._tables, "tables", key,
             lambda: PlanTable(tasks, assignment, hw, d_running,
                               d_transition, workers_per_fault,
                               lazy=True, cache=self, n_budget=n_budget,
                               engine=engine))
+        if prebuild:
+            table.rebuild_values()
+        return table
 
     def solve(self, inp: PlanInput, hw: Hardware) -> Plan:
         """Memoized fresh dispatch (``solve_fast`` — same plans as

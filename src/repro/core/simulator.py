@@ -328,6 +328,7 @@ class TraceSimulator:
                  policy: str, hw=costmodel.A800, n_nodes: int = 16,
                  gpus_per_node: int = 8, *,
                  plan_cache: Optional[PlannerCache] = None,
+                 plan_engine: str = "batched",
                  ablate_detection: bool = False,
                  ablate_transition: bool = False,
                  ablate_replan: bool = False):
@@ -335,7 +336,10 @@ class TraceSimulator:
         swap one Unicron mechanism for its baseline counterpart to
         measure that component's contribution (benchmarks/bench_ablation).
         ``plan_cache``: share a ``PlannerCache`` across runs (lazy plan
-        tables, chains reused across rebuilds; plans stay identical)."""
+        tables, chains reused across rebuilds; plans stay identical).
+        ``plan_engine``: the coordinator's incremental PlanTable engine
+        (``"batched"`` default; ``"segtree"``/``"chain"`` are the
+        measured baselines — all three produce float-identical plans)."""
         self.policy = policy
         self.ablate_detection = ablate_detection
         self.ablate_transition = ablate_transition
@@ -360,7 +364,8 @@ class TraceSimulator:
             self.coord = UnicronCoordinator(
                 tasks, assignment, hw, plan_cache=plan_cache,
                 n_cluster_workers=self._n_total,
-                workers_per_node=gpus_per_node)
+                workers_per_node=gpus_per_node,
+                plan_engine=plan_engine)
         # coordinator entry index per simulator slot (diverges under churn)
         self._ci: List[Optional[int]] = list(range(len(self.tasks)))
         self.spares = HOT_SPARES.get(policy, 0)
@@ -699,6 +704,7 @@ class VectorSimulator(TraceSimulator):
                  policy: str, hw=costmodel.A800, n_nodes: int = 16,
                  gpus_per_node: int = 8, *,
                  plan_cache: Optional[PlannerCache] = None,
+                 plan_engine: str = "batched",
                  ablate_detection: bool = False,
                  ablate_transition: bool = False,
                  ablate_replan: bool = False):
@@ -706,6 +712,7 @@ class VectorSimulator(TraceSimulator):
             plan_cache = PlannerCache()
         super().__init__(tasks, assignment, policy, hw, n_nodes,
                          gpus_per_node, plan_cache=plan_cache,
+                         plan_engine=plan_engine,
                          ablate_detection=ablate_detection,
                          ablate_transition=ablate_transition,
                          ablate_replan=ablate_replan)
@@ -779,11 +786,13 @@ class BatchSimulator:
                  policies: Optional[List[str]] = None, hw=costmodel.A800,
                  n_nodes: int = 16, gpus_per_node: int = 8, *,
                  plan_cache: Optional[PlannerCache] = None,
+                 plan_engine: str = "batched",
                  model_cache: Optional[Dict] = None):
         """``model_cache``: share memoized detection/transition model rows
         across simulators (``run_monte_carlo`` passes one per sweep) —
         entries are keyed by task identity, kind and DP degree, so they
-        are scenario-independent."""
+        are scenario-independent.  ``plan_engine``: the planner lanes'
+        incremental PlanTable engine (see ``TraceSimulator``)."""
         self.policies = list(policies or EFFICIENCY)
         P = len(self.policies)
         self.hw = hw
@@ -831,7 +840,8 @@ class BatchSimulator:
             self._coords[p] = UnicronCoordinator(
                 list(tasks), list(assignment), hw, plan_cache=cache,
                 n_cluster_workers=self._n_total,
-                workers_per_node=gpus_per_node)
+                workers_per_node=gpus_per_node,
+                plan_engine=plan_engine)
             self._cis[p] = list(range(M))
         P_range = list(range(P))
         self._all_list = P_range
@@ -1312,7 +1322,8 @@ def run_monte_carlo(tasks: List[Task], assignment: List[int],
                     gpus_per_node: int = 8,
                     plan_cache: Optional[PlannerCache] = None,
                     threads: Optional[int] = None,
-                    engine: str = "batched"
+                    engine: str = "batched",
+                    plan_engine: str = "batched"
                     ) -> Dict[str, MonteCarloResult]:
     """Batched Monte-Carlo sweep: ``scenario_fn(seed)`` generates one
     seeded ``ClusterScenario`` per seed; all runs share ONE
@@ -1332,7 +1343,14 @@ def run_monte_carlo(tasks: List[Task], assignment: List[int],
     (numpy's convolutions release the GIL): results are deterministic
     regardless of scheduling because every cache entry is fully
     determined by its key.  The batched engine is one sequential pass
-    per seed and ignores ``threads``."""
+    per seed and ignores ``threads``.
+
+    ``plan_engine`` selects the planner lanes' incremental PlanTable
+    engine (``"batched"`` default — level-synchronous stacked merges
+    with lazy traceback, the cold-path win ``bench_cluster_sim``'s
+    ``cold_*_wall_s`` columns measure; ``"segtree"``/``"chain"`` keep
+    the per-merge baselines).  Plans are float-identical across
+    engines, so WAF totals do not depend on the choice."""
     if engine not in ("batched", "vector"):
         raise ValueError(f"unknown Monte-Carlo engine {engine!r}")
     cache = plan_cache if plan_cache is not None else PlannerCache()
@@ -1349,6 +1367,7 @@ def run_monte_carlo(tasks: List[Task], assignment: List[int],
                                  n_nodes=n_nodes,
                                  gpus_per_node=gpus_per_node,
                                  plan_cache=cache,
+                                 plan_engine=plan_engine,
                                  model_cache=model_cache)
             for p, res in sim.run(sc).items():
                 per_policy[p].append(res)
@@ -1364,7 +1383,8 @@ def run_monte_carlo(tasks: List[Task], assignment: List[int],
         sim = VectorSimulator(tasks, list(assignment), policy, hw,
                               n_nodes=n_nodes,
                               gpus_per_node=gpus_per_node,
-                              plan_cache=cache)
+                              plan_cache=cache,
+                              plan_engine=plan_engine)
         return sim.run(scenario)
 
     for p in pols:

@@ -10,11 +10,21 @@ any memory space.  Follows the repo's execution-mode policy
 (``pallas_config``): compiled via Mosaic on TPU, interpreted on CPU/GPU,
 ``REPRO_PALLAS_INTERPRET``/kwarg override.
 
-The kernel runs in float32 (planner's numpy path is float64); the
+``maxplus_conv_batched`` is the grid-batched variant behind the
+``engine="batched"`` PlanTable: a (B, n+1) stack of independent
+convolutions with per-row bands runs as ONE ``pallas_call`` whose grid
+carries the stack axis — grid (B, n_blocks), each program reading only
+its own row's padded ``prev``/``g`` block.  Per-row bands are applied by
+masking each ``g`` row to -inf past its band (value-neutral: a masked
+candidate can never beat the always-present finite k=0 candidate), so
+every row equals the 2-D kernel on its own slice.
+
+The kernels run in float32 (planner's numpy path is float64); the
 ``REPRO_PLANNER_BACKEND=pallas`` switch in ``core.planner`` therefore
 trades ~1e-7 relative reward precision for the TPU hot path and is
 opt-in.  ``tests/test_kernels.py`` pins interpret-mode equivalence
-against the numpy oracle.
+against the numpy oracles (CI runs it under REPRO_PALLAS_INTERPRET=1 on
+every PR, 2-D and batched legs both).
 """
 from __future__ import annotations
 
@@ -99,3 +109,81 @@ def maxplus_conv_np(prev: np.ndarray, g: np.ndarray,
     pad = np.concatenate([np.full(b, NEG, dtype=np.float32), prev32])
     win = np.lib.stride_tricks.sliding_window_view(pad, b + 1)
     return (win + g32[b::-1][None, :]).max(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Grid-batched kernel: B independent banded convolutions, one pallas_call
+# ---------------------------------------------------------------------------
+
+
+def _maxplus_batched_kernel(prev_ref, g_ref, o_ref, *, band: int,
+                            block: int):
+    """o[b, dj] = max_k prev_pad[b, j0 + band + dj - k] + g[b, k] for the
+    (batch row, output block) this program owns."""
+    j0 = pl.program_id(1) * block
+
+    def body(k, acc):
+        w = prev_ref[0, pl.ds(j0 + band - k, block)]     # prev[b, j0+dj-k]
+        gk = g_ref[0, pl.ds(k, 1)]                       # g[b, k]
+        return jnp.maximum(acc, w + gk[0])
+
+    init = jnp.full((block,), NEG, dtype=jnp.float32)
+    o_ref[0, :] = jax.lax.fori_loop(0, band + 1, body, init)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "block", "interpret"))
+def _maxplus_batched_call(prev_pad, g, band: int, block: int,
+                          interpret: bool):
+    B = prev_pad.shape[0]
+    grid_blocks = (prev_pad.shape[1] - band) // block
+    return pl.pallas_call(
+        functools.partial(_maxplus_batched_kernel, band=band, block=block),
+        grid=(B, grid_blocks),
+        in_specs=[
+            pl.BlockSpec((1, prev_pad.shape[1]), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, g.shape[1]), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, grid_blocks * block),
+                                       jnp.float32),
+        interpret=interpret,
+    )(prev_pad, g)
+
+
+def maxplus_conv_batched(prev, g, bands=None, *, block: int = 128,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Stacked banded max-plus convolution: ``prev`` and ``g`` are
+    (B, n+1) float32 stacks, ``bands`` a per-row band sequence (``None``
+    entries = dense; a scalar or ``None`` applies one band to every
+    row).  Returns the (B, n+1) float32 value stack; row r equals
+    ``maxplus_conv(prev[r], g[r], band=bands[r])`` — rows are padded to
+    the widest band and the extra candidates are masked to -inf, which
+    never beats the finite k=0 candidate.  The batch axis rides on the
+    Pallas grid: one launch for the whole level of the batched
+    PlanTable engine."""
+    prev = jnp.asarray(prev, dtype=jnp.float32)
+    g = jnp.asarray(g, dtype=jnp.float32)
+    if prev.ndim != 2 or g.ndim != 2 or prev.shape != g.shape:
+        raise ValueError(f"prev/g must be equal-shape (B, n+1) stacks, "
+                         f"got {prev.shape} vs {g.shape}")
+    B, n1 = prev.shape
+    n = n1 - 1
+    if bands is None or np.isscalar(bands):
+        bands = [bands] * B
+    bs = np.array([n if b is None else max(0, min(int(b), n))
+                   for b in bands], dtype=np.int64)
+    if len(bs) != B:
+        raise ValueError(f"got {len(bs)} bands for a batch of {B}")
+    bmax = int(bs.max()) if B else 0
+    interpret = resolve_interpret(interpret)
+    nb = max(1, -(-n1 // block))                         # cdiv
+    length = nb * block
+    prev_pad = jnp.full((B, bmax + length), NEG, dtype=jnp.float32)
+    prev_pad = prev_pad.at[:, bmax:bmax + n1].set(prev)
+    ks = np.arange(n1)
+    g = jnp.where(jnp.asarray(ks[None, :] > bs[:, None]), NEG, g)
+    g_pad = jnp.full((B, max(n1, block)), NEG, dtype=jnp.float32)
+    g_pad = g_pad.at[:, :n1].set(g)
+    out = _maxplus_batched_call(prev_pad, g_pad, bmax, block, interpret)
+    return out[:, :n1]

@@ -252,3 +252,53 @@ def test_stale_epoch_task_report_never_removes_wrong_task(loop):
     assert cl.tick(now=51.5) == []             # stale report: no event
     assert len(coord.entries) == 1             # survivor still running
     assert coord.entries[0].task is survivor
+
+
+def test_plan_events_carry_batched_engine_counters(loop):
+    """Plan-producing LoopEvents are stamped with the coordinator's
+    cumulative batched-engine counters (level sweeps, stacked kernel
+    launches, lazy tracebacks), like ``plan_latency_s``."""
+    cl, agents, cluster, coord = loop
+    # non-plan events stay unstamped (SEV2 -> restart, no reconfigure)
+    agents[2].report(ErrorKind.CUDA_ERROR, now=0.0)
+    restart = cl.tick(now=0.5)[0]
+    assert restart.plan is None and restart.plan_tracebacks is None
+    for a in agents.values():
+        a.heartbeat(now=1.0)
+    agents[5].kill()
+    for a in agents.values():
+        a.heartbeat(now=5.0)                      # 5 is dead: no refresh
+    events = cl.tick(now=9.0)                     # 5's lease (1+6s) lapsed
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.plan is not None
+    # the dispatched fault scenario was materialized by one lazy
+    # traceback over batched level sweeps
+    assert ev.plan_tracebacks >= 1
+    assert ev.plan_launches >= 1
+    assert ev.plan_levels >= 1
+    assert ev.plan_tracebacks == coord.plan_stats.lazy_tracebacks
+    assert ev.plan_launches == coord.plan_stats.batched_launches
+
+
+def test_prebuild_scenarios_precomputes_whole_table_values():
+    """``prebuild_scenarios=True`` runs the whole-table batched value
+    rebuild on every refresh: totals for every scenario are ready before
+    any dispatch, and a dispatch only adds its own lazy traceback."""
+    from repro.core.planner import PlannerCache
+
+    tasks = [Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
+                                            global_batch=64)),
+             Task(model=TaskModel.from_arch(get_arch("gpt3-7b"),
+                                            global_batch=64))]
+    cache = PlannerCache()
+    coord = UnicronCoordinator(tasks, [32, 96], A800, plan_cache=cache,
+                               n_cluster_workers=128,
+                               prebuild_scenarios=True)
+    assert coord.plan_stats.batched_launches >= 1
+    assert coord.plan_stats.lazy_tracebacks == 0   # values only so far
+    table = coord._table
+    assert set(table.rebuild_values()) == set(table.scenario_keys())
+    plan, hit = coord.plan_for(120, 0, "fault:0")
+    assert hit
+    assert coord.plan_stats.lazy_tracebacks == 1

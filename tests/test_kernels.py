@@ -212,6 +212,53 @@ def test_maxplus_banded_matches_dense(seed, cap):
     np.testing.assert_allclose(got, dense, rtol=1e-6, atol=1e-5)
 
 
+@pytest.mark.parametrize("seed", range(6))
+def test_maxplus_batched_matches_2d_kernel(seed):
+    """The grid-batched Pallas kernel equals per-slice 2-D ``maxplus_conv``
+    calls (and the f32 numpy oracle) on stacks with mixed per-row bands —
+    the equivalence CI pins under REPRO_PALLAS_INTERPRET=1."""
+    from repro.kernels.maxplus import (maxplus_conv, maxplus_conv_batched,
+                                       maxplus_conv_np)
+    rng = np.random.RandomState(seed)
+    B = rng.randint(1, 5)
+    n = rng.randint(0, 120)
+    prev = np.maximum.accumulate(
+        rng.uniform(-50.0, 50.0, (B, n + 1)).astype(np.float32), axis=1)
+    g = rng.uniform(-50.0, 50.0, (B, n + 1)).astype(np.float32)
+    bands = []
+    for r in range(B):
+        band = rng.choice([None, rng.randint(0, n + 1)])
+        if band is not None:
+            band = int(band)
+            g[r, band:] = g[r, min(band, n)]
+        bands.append(band)
+    got = np.asarray(maxplus_conv_batched(prev, g, bands))
+    assert got.shape == (B, n + 1)
+    for r in range(B):
+        want = np.asarray(maxplus_conv(prev[r], g[r], band=bands[r]))
+        np.testing.assert_allclose(got[r], want, rtol=1e-6, atol=1e-5)
+        oracle = maxplus_conv_np(prev[r], g[r], band=bands[r])
+        np.testing.assert_allclose(got[r], oracle, rtol=1e-6, atol=1e-5)
+
+
+def test_maxplus_batched_scalar_band_and_shape_checks():
+    """Scalar band broadcast, band-count validation and 1-D rejection."""
+    from repro.kernels.maxplus import maxplus_conv, maxplus_conv_batched
+    rng = np.random.RandomState(11)
+    prev = np.maximum.accumulate(
+        rng.uniform(0, 10, (3, 33)).astype(np.float32), axis=1)
+    g = rng.uniform(0, 10, (3, 33)).astype(np.float32)
+    g[:, 8:] = g[:, 8:9]
+    got = np.asarray(maxplus_conv_batched(prev, g, 8))
+    for r in range(3):
+        want = np.asarray(maxplus_conv(prev[r], g[r], band=8))
+        np.testing.assert_allclose(got[r], want, rtol=1e-6, atol=1e-5)
+    with pytest.raises(ValueError):
+        maxplus_conv_batched(prev[0], g[0])
+    with pytest.raises(ValueError):
+        maxplus_conv_batched(prev, g, [8, 8])
+
+
 def test_maxplus_matches_planner_float64_kernel():
     """The float32 kernel tracks the planner's float64 value kernel to f32
     precision on O(100) data — the interpret-mode equivalence the CI step

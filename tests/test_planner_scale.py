@@ -328,17 +328,19 @@ def test_cached_table_matches_reference_under_random_churn():
 # ---- (e) segment-tree engine ----------------------------------------------
 
 
+@pytest.mark.parametrize("engine", ["segtree", "batched"])
 @pytest.mark.parametrize("m,n,caps", [
     (1, 8, [None]), (2, 16, [6, None]), (3, 36, [10, None, 8]),
     (5, 60, [12, 12, None, 4, 50]), (6, 96, [None] * 6)])
-def test_segtree_table_matches_reference(m, n, caps):
-    """Segment-tree tables (the default engine) match the all-scalar
-    reference on capped and uncapped fleets, with feasible tracebacks:
-    the traced assignment's scalar reward re-sums to the DP total."""
+def test_segtree_table_matches_reference(m, n, caps, engine):
+    """Tree-based tables (per-node segtree and the default
+    level-synchronous batched engine) match the all-scalar reference on
+    capped and uncapped fleets, with feasible tracebacks: the traced
+    assignment's scalar reward re-sums to the DP total."""
     tasks = _tasks(m, caps=caps)
     assignment = [n // m] * m
-    seg = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
-    assert seg.engine == "segtree"
+    seg = PlanTable(tasks, assignment, A800, 3600.0, 120.0, engine=engine)
+    assert seg.engine == engine
     ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
                     incremental=False, solver=solve_reference)
     assert set(seg.table) == set(ref.table)
@@ -395,20 +397,25 @@ def test_segtree_and_chain_engines_agree():
             chain.table[key].total_reward, rel=1e-9), key
 
 
-def test_segtree_cached_churn_reuses_log_m_nodes():
+@pytest.mark.parametrize("engine", ["segtree", "batched"])
+def test_segtree_cached_churn_reuses_log_m_nodes(engine):
     """A one-task churn step through a shared cache recomputes only the
     O(log m) tree nodes whose span contains the change (plus the
-    complements crossing them) — most array lookups are hits."""
+    complements crossing them) — most array lookups are hits.  Holds for
+    the per-node segtree engine and the level-synchronous batched one
+    (same content-keyed node/complement cache entries)."""
     m = 8
     tasks = _tasks(m, caps=[12] * m)
     cache = PlannerCache()
     assignment = [8] * m
-    t1 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80)
+    t1 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80,
+                     engine=engine)
     for key in t1.scenario_keys():
         t1.lookup(key)
     before = dict(cache.misses)
     assignment[3] = 12
-    t2 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80)
+    t2 = cache.table(tasks, assignment, A800, 3600.0, 120.0, n_budget=80,
+                     engine=engine)
     for key in t2.scenario_keys():
         t2.lookup(key)
     new_arrays = cache.misses["arrays"] - before["arrays"]
@@ -425,3 +432,134 @@ def test_segtree_cached_churn_reuses_log_m_nodes():
 def test_unknown_engine_rejected():
     with pytest.raises(ValueError):
         PlanTable(_tasks(1), [4], A800, 3600.0, 120.0, engine="btree")
+
+
+# ---- (f) level-synchronous batched engine ---------------------------------
+
+
+def test_batched_kernel_bitwise_identical_per_slice():
+    """The stacked kernel with per-row bands equals per-slice 2-D fused
+    calls bitwise, across mixed dense/banded rows and every strategy
+    bucket (shift-slab stacks and per-row tile fallthrough)."""
+    from repro.core.planner import _maxplus_vals_fused_batched
+    rng = np.random.RandomState(7)
+    for _ in range(120):
+        B = rng.randint(1, 10)
+        n = rng.randint(0, 70)
+        prev = np.maximum.accumulate(rng.uniform(-5, 5, (B, n + 1)),
+                                     axis=1)
+        g = rng.uniform(-5, 5, (B, n + 1))
+        bands = []
+        for r in range(B):
+            b = rng.choice([None, rng.randint(0, n + 1)])
+            if b is not None:
+                b = int(b)
+                g[r, b:] = g[r, min(b, n)]
+            bands.append(b)
+        out = _maxplus_vals_fused_batched(prev, g, bands)
+        for r in range(B):
+            want = _maxplus_vals_fused(prev[r], g[r], band=bands[r])
+            assert np.array_equal(out[r], want), (B, n, bands, r)
+
+
+@pytest.mark.parametrize("m,n,caps", [
+    (1, 8, [None]), (3, 36, [10, None, 8]), (6, 96, [12] * 6),
+    (7, 96, [16, None, 8, 24, None, 12, 16])])
+def test_batched_engine_bitwise_identical_to_segtree(m, n, caps):
+    """The level-synchronous engine stacks exactly the segtree's node
+    merges (same operands, orders and bands), so eager tables agree
+    bit for bit — totals AND assignments."""
+    tasks = _tasks(m, caps=caps)
+    assignment = [n // m] * m
+    bat = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="batched")
+    seg = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="segtree")
+    assert set(bat.table) == set(seg.table)
+    for key in seg.table:
+        assert bat.table[key].total_reward == seg.table[key].total_reward
+        assert bat.table[key].assignment == seg.table[key].assignment
+        assert bat.table[key].waf == seg.table[key].waf
+
+
+def test_batched_value_only_rebuild_with_lazy_traceback():
+    """``rebuild_values`` materializes every scenario's total with ZERO
+    tracebacks; a subsequent ``lookup`` runs exactly one traceback for
+    the dispatched key and its plan matches the eager build bitwise."""
+    tasks = _tasks(5, caps=[8, None, 12, None, 6])
+    assignment = [12] * 5
+    cache = PlannerCache()
+    eager = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+    lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0)
+    totals = lazy.rebuild_values()
+    assert lazy.batch_stats["tracebacks"] == 0
+    assert not lazy.table                    # values only, no Plans yet
+    assert set(totals) == set(eager.table)
+    for key, total in totals.items():
+        assert total == eager.table[key].total_reward, key
+        assert lazy.scenario_total(key) == total, key
+    plan = lazy.lookup("fault:2")
+    assert lazy.batch_stats["tracebacks"] == 1
+    assert plan.assignment == eager.table["fault:2"].assignment
+    assert plan.total_reward == eager.table["fault:2"].total_reward
+    # memoized Plan: a second lookup is a dict hit, not a new traceback
+    assert lazy.lookup("fault:2") is plan
+    assert lazy.batch_stats["tracebacks"] == 1
+
+
+@pytest.mark.parametrize("m", [1, 2, 5, 8, 16])
+def test_batched_rebuild_is_constant_launches_per_level(m):
+    """A whole-table rebuild issues O(log m) stacked launches (leaf pass
+    + one per tree level up, one per complement level down, one fault
+    stack), NOT O(m log m) per-merge kernel calls."""
+    import math
+    tasks = _tasks(m, caps=[12] * m)
+    table = PlanTable(tasks, [8] * m, A800, 3600.0, 120.0,
+                      engine="batched")
+    depth = max(1, math.ceil(math.log2(m))) if m > 1 else 0
+    assert table.batch_stats["launches"] <= 2 * depth + 1
+    # eager build materializes every scenario plan via lazy traceback
+    assert table.batch_stats["tracebacks"] == len(table.scenario_keys())
+    if m > 1:
+        assert table.batch_stats["levels"] >= 2
+
+
+def test_planner_cache_prebuild_runs_value_rebuild():
+    """``PlannerCache.table(prebuild=True)`` returns a table whose whole
+    -table value sweep already ran (totals memoized, no tracebacks), and
+    the memoized table comes back warm on a recurring state."""
+    tasks = _tasks(4, caps=[10, None, 8, 12])
+    assignment = [10, 10, 10, 10]
+    cache = PlannerCache()
+    table = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                        prebuild=True)
+    assert table.batch_stats["launches"] >= 1
+    assert table.batch_stats["tracebacks"] == 0
+    launches = table.batch_stats["launches"]
+    eager = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+    for key in table.scenario_keys():
+        assert table.scenario_total(key) == eager.table[key].total_reward
+    assert table.batch_stats["launches"] == launches   # sweep was done
+    again = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                        prebuild=True)                 # idempotent on hit
+    assert again is table
+    assert again.batch_stats["launches"] == launches
+
+
+def test_batched_scenario_total_value_only():
+    """``scenario_total`` never materializes assignments and agrees with
+    the reference solver's totals; unknown keys return None."""
+    tasks = _tasks(3, caps=[10, None, 8])
+    assignment = [12, 12, 12]
+    cache = PlannerCache()
+    lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0)
+    ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    for key in ref.table:
+        got = lazy.scenario_total(key)
+        assert got == pytest.approx(ref.table[key].total_reward,
+                                    rel=1e-9), key
+    assert lazy.scenario_total("nonsense") is None
+    assert lazy.scenario_total("fault:99") is None
+    assert lazy.batch_stats["tracebacks"] == 0
+    assert not lazy.table

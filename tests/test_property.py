@@ -137,6 +137,63 @@ def test_segtree_plan_table_matches_reference_under_capped_churn(data, m):
         assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
 
 
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(), m=st.integers(min_value=1, max_value=4))
+def test_batched_plan_table_matches_reference_under_capped_churn(data, m):
+    """ISSUE 5 property: random cap-constrained churn driven through
+    ``engine="batched"`` tables (shared PlannerCache; whole-table value
+    rebuilds interleaved with single-scenario dispatches) must reproduce
+    the scalar reference's reward on every scenario of every
+    intermediate state, with assignments identical to the segtree engine
+    (the batched sweep stacks exactly its merges) and budget-feasible."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import A800, TaskModel
+    from repro.core.planner import PlannerCache, PlanTable
+    from repro.core.waf import Task
+
+    sizes = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+    caps = [data.draw(st.sampled_from([4, 8, 12, None])) for _ in range(m)]
+    tasks = [Task(model=TaskModel.from_arch(get_arch(sizes[i % 4]),
+                                            global_batch=128 if i % 2
+                                            else 256),
+                  weight=0.5 + 0.1 * i, max_workers=caps[i])
+             for i in range(m)]
+    cache = PlannerCache()
+    seg_cache = PlannerCache()
+    assignment = [data.draw(st.sampled_from([4, 8, 12])) for _ in range(m)]
+    for _ in range(data.draw(st.integers(min_value=1, max_value=3))):
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           workers_per_fault=4, n_budget=52,
+                           engine="batched")
+        seg = seg_cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                              workers_per_fault=4, n_budget=52,
+                              engine="segtree")
+        ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                        workers_per_fault=4, incremental=False,
+                        solver=solve_reference)
+        n_now = sum(assignment)
+        whole_table = data.draw(st.booleans())
+        if whole_table:
+            tb_before = lazy.batch_stats["tracebacks"]
+            totals = lazy.rebuild_values()
+            # value-only: the sweep never materializes assignments
+            assert lazy.batch_stats["tracebacks"] == tb_before
+        for key in ref.table:
+            got = lazy.lookup(key)
+            want = ref.table[key]
+            assert abs(got.total_reward - want.total_reward) \
+                <= 1e-9 * max(1.0, abs(want.total_reward)), key
+            if whole_table:
+                assert got.total_reward == totals[key], key
+            assert got.assignment == seg.lookup(key).assignment, key
+            budget = {"join:1": n_now + 4}.get(
+                key, n_now if key.startswith("finish")
+                else max(n_now - 4, 0))
+            assert sum(got.assignment) <= budget, (key, got)
+        i = data.draw(st.integers(min_value=0, max_value=m - 1))
+        assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     data=st.data(),
