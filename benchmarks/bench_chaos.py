@@ -1,0 +1,130 @@
+"""Chaos-hardened control plane (ISSUE 6): per-class time-to-reconverge
+of the agent -> status-monitor -> control-loop path under seeded fault
+injection, plus the coordinator-journaling overhead on the dispatch path.
+
+Gated rows (``check_regression.py``):
+
+* one row per ``scenarios.chaos_suite`` class — ``converged`` (1.0),
+  ``waf_delta`` vs the chaos-free run (0 within 1e-6), and the
+  deterministic ``reconverge_s`` (how long after the last world event
+  the control plane kept reacting to chaos) are ``equal``-gated;
+* the journaling overhead ratios are ``lower``-gated: journal writes sit
+  outside the timed dispatch windows, so enabling the journal must stay
+  well under 2x on both the end-to-end churn path and the measured
+  ``last_dispatch_s`` fault path.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_arch
+from repro.core.chaos import ChaosHarness, demo_world, world_windows
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.costmodel import A800, TaskModel
+from repro.core.handling import Trigger
+from repro.core.scenarios import chaos_suite
+from repro.core.waf import Task
+
+SPAN = 2600.0
+SUITE_SEED = 3
+HARNESS_SEED = 7
+
+
+def _fleet():
+    def mk(size, w):
+        return Task(model=TaskModel.from_arch(get_arch(size),
+                                              global_batch=128), weight=w)
+    tasks = [mk("gpt3-1.3b", 2.0), mk("gpt3-7b", 1.4), mk("gpt3-1.3b", 1.0)]
+    return tasks, [8, 8, 4], mk("gpt3-1.3b", 0.7)
+
+
+def _run_harness(world, schedule=None, seed=0):
+    tasks, assignment, _ = _fleet()
+    h = ChaosHarness(tasks=tasks, assignment=assignment, hw=A800,
+                     schedule=schedule, seed=seed)
+    until = SPAN if schedule is None else max(SPAN,
+                                              schedule.horizon() + 120.0)
+    return h, h.run(world, until=until)
+
+
+def _reconvergence_rows():
+    tasks, assignment, launch = _fleet()
+    world = demo_world(tasks[2], launch)
+    last_world_t = max(ev.time for ev in world)
+    _, free = _run_harness(world)
+    rows = []
+    suite = chaos_suite(seed=SUITE_SEED, span_s=SPAN, n_nodes=6,
+                        avoid=world_windows(world))
+    for name, sched in suite.items():
+        h, res = _run_harness(world, schedule=sched, seed=HARNESS_SEED)
+        converged = (res.assignment == free.assignment
+                     and abs(res.waf - free.waf) < 1e-6
+                     and h.quiesced())
+        assert converged, f"chaos class {name!r} failed to reconverge"
+        rows.append({
+            "case": name,
+            "converged": float(converged),
+            "waf_delta": abs(res.waf - free.waf),
+            # how long past the last world event the control plane was
+            # still reacting (restores, late deliveries, crash recovery)
+            "reconverge_s": max(0.0, res.last_event_t - last_world_t),
+            "n_crashes": res.n_crashes,
+            "n_partitions": len(sched.partitions),
+            "dropped": res.chaos_stats["dropped"],
+            "delayed": res.chaos_stats["delayed"],
+            "duplicated": res.chaos_stats["duplicated"],
+            "rejected": res.chaos_stats["rejected"],
+        })
+    return rows
+
+
+def _journal_overhead_row():
+    def mk_coord(journal):
+        tasks, assignment, _ = _fleet()
+        return UnicronCoordinator(list(tasks), list(assignment), A800,
+                                  n_cluster_workers=24, workers_per_node=4,
+                                  journal=journal)
+
+    _, _, launch = _fleet()
+
+    def churn(coord):
+        coord.task_launched(launch, 20, avg_iter_s=12.0)
+        coord.task_finished(len(coord.entries) - 1, 24)
+
+    def fault_dispatch(coord):
+        coord.reconfigure(20, faulted_task=1)
+        d = coord.plan_stats.last_dispatch_s
+        coord.reconfigure(24, trigger=Trigger.NODE_JOIN)
+        return d
+
+    on, off = mk_coord(journal=True), mk_coord(journal=False)
+    churn_on = timeit(churn, on, warmup=2, iters=7)
+    churn_off = timeit(churn, off, warmup=2, iters=7)
+    d_on = sorted(fault_dispatch(on) for _ in range(15))[7]
+    d_off = sorted(fault_dispatch(off) for _ in range(15))[7]
+    churn_ratio = churn_on / max(churn_off, 1e-12)
+    dispatch_ratio = d_on / max(d_off, 1e-12)
+    # the design claim: journal writes live outside the timed windows
+    assert churn_ratio < 2.0, churn_ratio
+    assert dispatch_ratio < 2.0, dispatch_ratio
+    return {
+        "case": "journal_overhead",
+        "churn_on_s": churn_on, "churn_off_s": churn_off,
+        "churn_overhead_ratio": churn_ratio,
+        "dispatch_on_s": d_on, "dispatch_off_s": d_off,
+        "dispatch_overhead_ratio": dispatch_ratio,
+    }
+
+
+def run() -> list:
+    rows = _reconvergence_rows()
+    rows.append(_journal_overhead_row())
+    emit(rows, "chaos",
+         ["case", "converged", "waf_delta", "reconverge_s", "n_crashes",
+          "n_partitions", "dropped", "delayed", "duplicated", "rejected",
+          "churn_overhead_ratio", "dispatch_overhead_ratio",
+          "churn_on_s", "churn_off_s", "dispatch_on_s", "dispatch_off_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,10 @@ slower or faster than the machine that recorded the baselines:
   below ``baseline / slack``;
 * ``equal``: deterministic analytic-model outputs must match the baseline
   to a tight relative tolerance (accidental cost-model drift is a
-  regression even when it is fast).
+  regression even when it is fast);
+* ``lower``: same-machine overhead ratios (e.g. journaling-on vs
+  journaling-off dispatch latency) must not rise above
+  ``baseline * slack``.
 
 Rows are matched by their key columns; fresh rows without a baseline
 counterpart (new configurations) and baseline rows the quick grid does not
@@ -77,6 +80,15 @@ SPECS = {
         "keys": ("gpus",),
         "equal": ("unicron_s", "megatron_s", "oobleck_s", "bamboo_s"),
     },
+    "chaos": {
+        # per-class reconvergence rows are fully deterministic (seeded
+        # schedules, tick-driven harness); the journal_overhead row gates
+        # the journaling-on/off latency ratios, which must stay near 1
+        # because journal writes live outside the timed dispatch windows
+        "keys": ("case",),
+        "equal": ("converged", "waf_delta", "reconverge_s", "n_crashes"),
+        "lower": ("churn_overhead_ratio", "dispatch_overhead_ratio"),
+    },
 }
 
 
@@ -136,6 +148,18 @@ def check_bench(name, spec, baseline_rows, fresh_rows, slack):
                 violations.append(
                     f"{name}{key}: {metric} {fresh_v:.3g} < "
                     f"baseline {base_v:.3g} / slack {slack:g}"
+                )
+        for metric in spec.get("lower", ()):
+            if skip_small and metric not in exempt:
+                continue
+            fresh_v, base_v = _num(row.get(metric)), _num(base.get(metric))
+            if fresh_v is None or base_v is None or base_v <= 0:
+                continue
+            compared += 1
+            if fresh_v > base_v * slack:
+                violations.append(
+                    f"{name}{key}: {metric} {fresh_v:.3g} > "
+                    f"baseline {base_v:.3g} * slack {slack:g}"
                 )
         for metric in spec.get("equal", ()):
             if skip_small and metric not in exempt:

@@ -32,9 +32,9 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
            "cluster_sim", "transition", "throughput", "waf_multitask",
-           "traces", "ablation", "roofline"]
+           "traces", "ablation", "roofline", "chaos"]
 QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-                 "cluster_sim", "transition"]
+                 "cluster_sim", "transition", "chaos"]
 
 
 def main() -> None:

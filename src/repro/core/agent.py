@@ -3,22 +3,44 @@
 Responsibilities: (i) persistent heartbeat to the coordinator through the
 status monitor (node health detection), (ii) one monitoring thread per GPU
 (process supervision + exception propagation), (iii) executing recovery
-actions, (iv) managing the GEMINI-style in-memory checkpoint tier.
+actions — including restoring training state from the nearest checkpoint
+tier (``recover_checkpoint``), (iv) managing the GEMINI-style in-memory
+checkpoint tier.
+
+Delivery semantics (the producer side of the contract in ``kvstore.py``):
+every report — errors, task finishes, launch admissions — is published
+*at least once*.  The agent keeps each record in a local outbox and
+re-publishes it with seeded exponential backoff + jitter until the
+control loop acknowledges consumption by writing the record's
+``CONSUMED_PREFIX`` marker; during a partition (``KVUnavailable``) the
+outbox simply queues and flushes on heal (graceful degradation).  Keys
+are deterministic per report, so a re-publish can never double-fire a
+trigger: the consumer's marker makes re-delivery a no-op.  Heartbeats
+are NOT outboxed — a lost beat is superseded by the next one, and a
+stale beat must not refresh a lease.
 
 In this reproduction the agent's timing behavior runs inside the
 discrete-event simulator; its *state machine* is the real code below.
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.core.detection import (ErrorKind, OnlineStatMonitor, classify,
                                   detection_time)
-from repro.core.kvstore import KVStore, PLAN_EPOCH_KEY
+from repro.core.kvstore import CONSUMED_PREFIX, KVStore, KVUnavailable
 
 HEARTBEAT_INTERVAL_S = 2.0
 HEARTBEAT_TTL_S = 6.0
+
+# outbox re-publish backoff: base * 2^attempt, capped, with seeded
+# jitter in [0.5, 1.5).  The cap keeps the worst-case re-publish lag
+# (and therefore the spacing the chaos convergence harness needs
+# between world events) small.
+BACKOFF_BASE_S = 1.0
+BACKOFF_CAP_S = 8.0
 
 
 @dataclass
@@ -34,26 +56,74 @@ class GPUMonitor:
         return kind
 
 
+@dataclass
+class _OutboxItem:
+    record: Dict
+    created: float
+    next_retry: float
+    attempts: int = 0
+
+
 class UnicronAgent:
-    def __init__(self, node_id: int, kv: KVStore, n_gpus: int = 8):
+    def __init__(self, node_id: int, kv: KVStore, n_gpus: int = 8,
+                 seed: Optional[int] = None):
         self.node_id = node_id
         self.kv = kv
         self.monitors = [GPUMonitor(g) for g in range(n_gpus)]
         self.stat_monitor = OnlineStatMonitor()
         self.alive = True
         self._launch_seq = 0
+        self._rng = random.Random(node_id if seed is None else seed)
+        self._outbox: Dict[str, _OutboxItem] = {}
 
     # ---- heartbeat / node health -------------------------------------------
 
     def heartbeat(self, now: float) -> None:
-        if self.alive:
+        if not self.alive:
+            return
+        try:
             self.kv.put(f"/nodes/{self.node_id}/alive", now,
                         ttl=HEARTBEAT_TTL_S, now=now)
+        except KVUnavailable:
+            pass          # partitioned: the lease lapses; next beat retries
 
     def kill(self) -> None:
         """Simulated node loss: heartbeats stop; the coordinator's lease
         expiry raises LOST_CONNECTION."""
         self.alive = False
+
+    # ---- at-least-once publication (outbox) --------------------------------
+
+    @property
+    def outbox_size(self) -> int:
+        return len(self._outbox)
+
+    def _backoff(self, attempts: int) -> float:
+        base = min(BACKOFF_CAP_S, BACKOFF_BASE_S * (2.0 ** attempts))
+        return base * (0.5 + self._rng.random())
+
+    def _publish(self, key: str, record: Dict, now: float) -> None:
+        self._outbox[key] = _OutboxItem(record=record, created=now,
+                                        next_retry=now)
+        self.flush_outbox(now)
+
+    def flush_outbox(self, now: float) -> None:
+        """Re-publish every unacknowledged record that is due.  A record
+        retires when its processed marker appears (the control loop's
+        delete-on-consume ack); until then each attempt re-puts the SAME
+        key, so duplicates collapse at the consumer."""
+        for key, item in list(self._outbox.items()):
+            if item.next_retry > now:
+                continue
+            try:
+                if self.kv.get(CONSUMED_PREFIX + key) is not None:
+                    del self._outbox[key]          # acked: retire
+                    continue
+                self.kv.put(key, item.record, now=now)
+            except KVUnavailable:
+                pass                # partitioned: stay queued, back off
+            item.attempts += 1
+            item.next_retry = now + self._backoff(item.attempts)
 
     # ---- in-band error reporting ---------------------------------------
 
@@ -66,7 +136,7 @@ class UnicronAgent:
         record = {"node": self.node_id, "kind": kind.value,
                   "severity": int(sev), "method": method.value,
                   "raised_at": now, "visible_at": now + latency}
-        self.kv.put(f"/errors/{self.node_id}/{now:.3f}", record, now=now)
+        self._publish(f"/errors/{self.node_id}/{now:.3f}", record, now)
         return record
 
     # ---- task churn reports (Figure 7 trigger 5) -------------------------
@@ -89,8 +159,8 @@ class UnicronAgent:
         record = {"node": self.node_id, "task": int(task_index),
                   "epoch": int(epoch), "finished_at": now,
                   "visible_at": now}
-        self.kv.put(f"/tasks/finished/{now:.3f}/{self.node_id}", record,
-                    now=now)
+        self._publish(f"/tasks/finished/{now:.3f}/{self.node_id}",
+                      record, now)
         return record
 
     # ---- task launch admission (Figure 7 trigger 6) ----------------------
@@ -122,10 +192,33 @@ class UnicronAgent:
         # order, and admission order determines coordinator entry order
         # and which record wins the per-task dedup, so lexicographic must
         # equal chronological across digit-width boundaries.
-        self.kv.put(
+        self._publish(
             f"/tasks/launch/{now:017.3f}/{self.node_id}/{self._launch_seq}",
-            record, now=now)
+            record, now)
         return record
+
+    # ---- recovery: nearest-tier checkpoint restore (§6.3 / GEMINI) -------
+
+    def recover_checkpoint(self, store, task: str, rank: int, *,
+                           persist_dir: Optional[str] = None,
+                           template=None) -> Tuple[object, int, str]:
+        """Restore a rank's training state along the recovery preference
+        order: local host RAM -> ring-neighbor replica (both via the
+        GEMINI ``InMemoryStore``) -> persistent remote tier.  Returns
+        (state, step, source).  Raises ``FileNotFoundError`` when no tier
+        holds the state (fresh start)."""
+        hit = store.get(task, rank)
+        if hit is not None:
+            step, tree, src = hit
+            return tree, step, src
+        if persist_dir is not None:
+            from repro.checkpoint import persistent
+            step = persistent.latest_step(persist_dir)
+            if step is not None:
+                return (persistent.restore(persist_dir, template), step,
+                        "persistent")
+        raise FileNotFoundError(
+            f"no checkpoint for task={task!r} rank={rank} in any tier")
 
     # ---- iteration statistics (online statistical monitoring) -----------
 

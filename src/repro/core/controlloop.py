@@ -11,7 +11,31 @@ that turns that stream into decisions:
      reconfigure) with escalation on repeated failure,
   4. on SEV1: drain the node in the cluster state and fetch the
      reconfiguration plan (lookup table first, fresh solve on miss),
-  5. on node repair: rejoin + replan.
+  5. on node repair or reappearance: rejoin + replan (or restore).
+
+Delivery semantics (the consumer side of the contract in ``kvstore.py``):
+agents publish at-least-once, so every record may arrive more than once
+and out of order.  The loop is idempotent under that: a record is
+*consumed* by deleting it and writing a processed marker under
+``CONSUMED_PREFIX + key`` (the producer-visible ack); a re-delivered
+record whose marker exists is deleted without re-firing.  All
+consumption state lives in the KV — a restarted loop (after a
+coordinator crash) inherits the markers and never double-fires a
+trigger.  Markers are garbage-collected after ``marker_retention_s``
+(which must exceed the transport's maximum re-delivery lag); records
+themselves are deleted on consume, so KV residency stays bounded over
+arbitrarily long traces.
+
+False-positive drains: a partition can silence a healthy node's
+heartbeats long enough to expire its lease.  Before draining on
+LOST_CONNECTION the loop snapshots the pre-drain assignment under
+``/coord/lost/<node>``; when the node's heartbeat *reappears* (a beat
+newer than the drain), the loop rejoins it and — if the plan state is
+otherwise unchanged — restores that exact assignment instead of
+replanning.  Restoring matters because the planner's reward is
+hysteretic (transition penalties make it sticky): replanning after a
+spurious drain would not return to the pre-drain optimum, so restore is
+what makes chaos runs converge to the chaos-free state exactly.
 
 The loop is deliberately synchronous and driven by an external clock so
 the discrete-event simulator and the real examples share it.
@@ -26,7 +50,9 @@ from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
 from repro.core.detection import ErrorKind
 from repro.core.handling import Action, Trigger
-from repro.core.kvstore import PLAN_EPOCH_KEY
+from repro.core.kvstore import CONSUMED_PREFIX, PLAN_EPOCH_KEY
+
+LOST_PREFIX = "/coord/lost/"
 
 
 @dataclass
@@ -49,13 +75,14 @@ class LoopEvent:
 
 class ControlLoop:
     def __init__(self, coordinator: UnicronCoordinator, cluster: Cluster,
-                 agents: Dict[int, UnicronAgent]):
+                 agents: Dict[int, UnicronAgent],
+                 marker_retention_s: float = 600.0):
         self.coord = coordinator
         self.cluster = cluster
         self.agents = agents
         self.kv = coordinator.kv
         self.events: List[LoopEvent] = []
-        self._seen: set = set()
+        self.marker_retention_s = marker_retention_s
         self._case_seq = 0
 
     def _stamped(self, ev: LoopEvent) -> LoopEvent:
@@ -71,6 +98,23 @@ class ControlLoop:
             ev.plan_tracebacks = ps.lazy_tracebacks
         return ev
 
+    # ---- idempotent consumption (KV-backed processed markers) --------------
+
+    def _consumed(self, key: str) -> bool:
+        return self.kv.get(CONSUMED_PREFIX + key) is not None
+
+    def _consume(self, key: str, now: float) -> None:
+        """Delete-on-consume + processed marker: the delete bounds KV
+        residency, the marker is both the re-delivery guard and the
+        producer-visible acknowledgement (outbox retirement)."""
+        self.kv.delete(key)
+        self.kv.put(CONSUMED_PREFIX + key, now, now=now)
+
+    def _gc_markers(self, now: float) -> None:
+        for key, t in self.kv.prefix(CONSUMED_PREFIX).items():
+            if now - float(t) > self.marker_retention_s:
+                self.kv.delete(key)
+
     # ---- one tick of the loop ---------------------------------------------
 
     def tick(self, now: float) -> List[LoopEvent]:
@@ -80,6 +124,8 @@ class ControlLoop:
         out += self._drain_task_reports(now)
         out += self._drain_launch_requests(now)
         out += self._rejoin_repaired(now)
+        out += self._rejoin_reappeared(now)
+        self._gc_markers(now)
         self.events += out
         return out
 
@@ -95,9 +141,12 @@ class ControlLoop:
     def _drain_error_reports(self, now: float) -> List[LoopEvent]:
         out = []
         for key, rec in sorted(self.kv.prefix("/errors/").items()):
-            if key in self._seen or rec["visible_at"] > now:
+            if self._consumed(key):
+                self.kv.delete(key)            # re-delivered duplicate
                 continue
-            self._seen.add(key)
+            if rec["visible_at"] > now:
+                continue
+            self._consume(key, now)
             out.append(self._handle(now, rec["node"],
                                     ErrorKind(rec["kind"])))
         return out
@@ -116,9 +165,12 @@ class ControlLoop:
         epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
         done = set()
         for key, rec in sorted(self.kv.prefix("/tasks/finished/").items()):
-            if key in self._seen or rec["visible_at"] > now:
+            if self._consumed(key):
+                self.kv.delete(key)            # re-delivered duplicate
                 continue
-            self._seen.add(key)
+            if rec["visible_at"] > now:
+                continue
+            self._consume(key, now)
             if rec.get("epoch", epoch) != epoch:
                 continue                       # stale: indices have shifted
             done.add(int(rec["task"]))
@@ -138,9 +190,12 @@ class ControlLoop:
         epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
         pending: Dict[object, Dict] = {}
         for key, rec in sorted(self.kv.prefix("/tasks/launch/").items()):
-            if key in self._seen or rec["visible_at"] > now:
+            if self._consumed(key):
+                self.kv.delete(key)            # re-delivered duplicate
                 continue
-            self._seen.add(key)
+            if rec["visible_at"] > now:
+                continue
+            self._consume(key, now)
             if rec.get("epoch", epoch) != epoch:
                 continue                       # stale: plan state moved on
             pending.setdefault(rec["task"], rec)
@@ -163,6 +218,10 @@ class ControlLoop:
                 self.cluster.recover_node(node.node_id)
                 if node.node_id in self.agents:
                     self.agents[node.node_id].alive = True
+                # a repaired node is a fresh join, not a reappearance:
+                # drop any pending lost-node snapshot so the restore path
+                # cannot fire once its heartbeats resume
+                self.kv.delete(f"{LOST_PREFIX}{node.node_id}")
                 plan = self.coord.reconfigure(
                     self.cluster.healthy_workers(),
                     trigger=Trigger.NODE_JOIN)
@@ -173,22 +232,78 @@ class ControlLoop:
                     self.coord.plan_stats.last_dispatch_s)))
         return out
 
+    def _rejoin_reappeared(self, now: float) -> List[LoopEvent]:
+        """Undo false-positive drains: a node drained for LOST_CONNECTION
+        whose heartbeat resumes (a beat strictly newer than the drain)
+        was partitioned, not dead.  Rejoin it and restore the exact
+        pre-drain assignment when the plan state is unchanged (same
+        epoch, same task count, same healthy capacity after rejoin);
+        otherwise fall back to an ordinary join replan."""
+        out = []
+        for key, saved in sorted(self.kv.prefix(LOST_PREFIX).items()):
+            node = int(key[len(LOST_PREFIX):])
+            if self.cluster.nodes[node].healthy:
+                self.kv.delete(key)            # repaired through other path
+                continue
+            hb = self.kv.get(f"/nodes/{node}/alive")
+            if hb is None or float(hb) <= saved["drained_at"]:
+                continue                       # still silent
+            self.kv.delete(key)
+            self.cluster.recover_node(node)
+            if node in self.agents:
+                self.agents[node].alive = True
+            restorable = (
+                saved["epoch"] == self.coord.plan_epoch
+                and len(saved["assignment"]) == len(self.coord.entries)
+                and self.cluster.healthy_workers() == saved["healthy_workers"])
+            if restorable:
+                self.coord.restore_assignment(saved["assignment"])
+                plan, plan_s = tuple(saved["assignment"]), None
+            else:
+                p = self.coord.reconfigure(self.cluster.healthy_workers(),
+                                           trigger=Trigger.NODE_JOIN)
+                plan = p.assignment
+                plan_s = self.coord.plan_stats.last_dispatch_s
+            self.cluster.assign(list(plan))
+            out.append(self._stamped(LoopEvent(
+                now, node, ErrorKind.LOST_CONNECTION, Action.RESUME,
+                plan, plan_s)))
+        return out
+
     # ---- decision path -----------------------------------------------------
+
+    def _drain_and_replan(self, now: float, node: int,
+                          kind: ErrorKind) -> Tuple[Tuple[int, ...], float]:
+        """SEV1 drain: snapshot the pre-drain state (for the reappearance
+        restore path), fail the node, and fetch the reconfiguration plan."""
+        if kind is ErrorKind.LOST_CONNECTION:
+            self.kv.put(f"{LOST_PREFIX}{node}", {
+                "drained_at": now,
+                "healthy_workers": self.cluster.healthy_workers(),
+                "assignment": tuple(e.n_workers for e in self.coord.entries),
+                "epoch": self.coord.plan_epoch,
+            }, now=now)
+        owner = self.cluster.placement.get(node)
+        self.cluster.fail_node(node, repair_done_at=now + 86400.0)
+        p = self.coord.reconfigure(self.cluster.healthy_workers(),
+                                   faulted_task=owner,
+                                   trigger=Trigger.ERROR)
+        self.cluster.assign(list(p.assignment))
+        return p.assignment, self.coord.plan_stats.last_dispatch_s
 
     def _handle(self, now: float, node: int, kind: ErrorKind) -> LoopEvent:
         self._case_seq += 1
-        case_id = f"{node}:{kind.value}:{self._case_seq}"
+        # case ids carry the wall clock so they stay unique across a
+        # coordinator crash (the per-loop sequence restarts at 0)
+        case_id = f"{node}:{kind.value}:{now:.3f}:{self._case_seq}"
         decision = self.coord.on_error(case_id, kind)
         plan, plan_s = None, None
-        if decision.action is Action.RECONFIGURE:
-            owner = self.cluster.placement.get(node)
-            self.cluster.fail_node(node, repair_done_at=now + 86400.0)
-            p = self.coord.reconfigure(self.cluster.healthy_workers(),
-                                       faulted_task=owner,
-                                       trigger=Trigger.ERROR)
-            self.cluster.assign(list(p.assignment))
-            plan = p.assignment
-            plan_s = self.coord.plan_stats.last_dispatch_s
+        if decision.action is Action.RECONFIGURE \
+                and self.cluster.nodes[node].healthy:
+            # the healthy guard makes duplicate SEV1s on an
+            # already-drained node (e.g. a delayed heartbeat re-creating
+            # then re-expiring a lease) a no-op instead of a double drain
+            plan, plan_s = self._drain_and_replan(now, node, kind)
         self.coord.close_case(case_id)
         return self._stamped(LoopEvent(now, node, kind, decision.action,
                                        plan, plan_s))
@@ -230,19 +345,13 @@ class ControlLoop:
                       kind: ErrorKind) -> LoopEvent:
         """A reattempt/restart did not fix it: escalate one level."""
         self._case_seq += 1
-        case_id = f"{node}:{kind.value}:esc{self._case_seq}"
+        case_id = f"{node}:{kind.value}:{now:.3f}:esc{self._case_seq}"
         self.coord.on_error(case_id, kind)
         decision = self.coord.on_action_failed(case_id)
         plan, plan_s = None, None
-        if decision.action is Action.RECONFIGURE:
-            owner = self.cluster.placement.get(node)
-            self.cluster.fail_node(node, repair_done_at=now + 86400.0)
-            p = self.coord.reconfigure(self.cluster.healthy_workers(),
-                                       faulted_task=owner,
-                                       trigger=Trigger.ERROR)
-            self.cluster.assign(list(p.assignment))
-            plan = p.assignment
-            plan_s = self.coord.plan_stats.last_dispatch_s
+        if decision.action is Action.RECONFIGURE \
+                and self.cluster.nodes[node].healthy:
+            plan, plan_s = self._drain_and_replan(now, node, kind)
         self.coord.close_case(case_id)
         ev = self._stamped(LoopEvent(now, node, kind, decision.action,
                                      plan, plan_s))

@@ -4,6 +4,17 @@ Consumes agent status from the KV store, classifies failures, decides
 actions (handling.py), and generates reconfiguration plans (planner.py)
 over *all* tasks in the cluster.  The discrete-event simulator provides
 time; every decision here is the real algorithm.
+
+Crash-recovery: the coordinator journals its durable state — task set,
+per-task assignment/status, plan epoch, and open failure cases — to
+``/coord/journal/*`` in the status monitor on every mutation, and
+``UnicronCoordinator.recover(kv, hw, ...)`` rebuilds an equivalent
+coordinator (entries, epoch, cases, and a refreshed ``PlanTable``) from
+that journal after a crash.  Each instance claims an incarnation epoch
+under ``/coord/incarnation`` at construction; journal and plan-epoch
+writes are fenced on it, so a deposed predecessor that wakes up after a
+recovery raises ``StaleCoordinatorError`` instead of shadowing its
+successor's state.
 """
 from __future__ import annotations
 
@@ -13,11 +24,24 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import planner, waf as waf_mod
 from repro.core.costmodel import Hardware
-from repro.core.detection import ErrorKind
+from repro.core.detection import ErrorKind, Severity
 from repro.core.handling import FailureCase, HandlingDecision, Trigger, decide
 from repro.core.kvstore import KVStore, PLAN_EPOCH_KEY
 from repro.core.planner import Plan, PlanInput, PlanTable
 from repro.core.waf import Task
+
+# Coordinator journal: rewritten in full on every mutation (task churn,
+# reconfiguration, case open/close).  Small — O(tasks + open cases) —
+# so full rewrite beats a log that would need compaction.
+JOURNAL_TASKS_KEY = "/coord/journal/tasks"
+JOURNAL_EPOCH_KEY = "/coord/journal/epoch"
+JOURNAL_CASES_KEY = "/coord/journal/cases"
+INCARNATION_KEY = "/coord/incarnation"
+
+
+class StaleCoordinatorError(RuntimeError):
+    """A deposed coordinator incarnation tried to write journaled state
+    after a successor claimed the incarnation key (fencing, §3.2)."""
 
 
 @dataclass
@@ -66,7 +90,8 @@ class UnicronCoordinator:
                  n_cluster_workers: Optional[int] = None,
                  workers_per_node: int = 8,
                  plan_engine: str = "batched",
-                 prebuild_scenarios: bool = False):
+                 prebuild_scenarios: bool = False,
+                 journal: bool = True):
         """``plan_cache``: share a ``PlannerCache`` across coordinators —
         plan tables become lazy (scenarios assembled on first lookup) and
         rows/prefix-suffix DPs/solves are reused across rebuilds, with
@@ -91,11 +116,21 @@ class UnicronCoordinator:
         engine a constant number of stacked launches per tree level, so
         every subsequent dispatch is a memo read plus one lazy traceback.
         Off by default: the Monte-Carlo engines keep lazy tables (most
-        intermediate states are never consulted)."""
+        intermediate states are never consulted).
+
+        ``journal``: persist task set / epoch / open cases to
+        ``/coord/journal/*`` on every mutation so ``recover`` can rebuild
+        this coordinator after a crash.  On by default; benchmarks turn
+        it off to measure the journaling overhead."""
         self.hw = hw
         self.plan_engine = plan_engine
         self.prebuild_scenarios = prebuild_scenarios
         self.kv = kv or KVStore()
+        self.journal = journal
+        # claim the incarnation: any still-running predecessor is deposed
+        # and its next fenced write raises StaleCoordinatorError
+        self.incarnation = int(self.kv.get(INCARNATION_KEY, 0)) + 1
+        self.kv.put(INCARNATION_KEY, self.incarnation)
         self.entries: List[TaskEntry] = [
             TaskEntry(task=t, n_workers=x,
                       state_bytes=16.0 * t.model.n_params)
@@ -117,8 +152,10 @@ class UnicronCoordinator:
         self._bstats_src: Optional[PlanTable] = None
         self._bstats_seen: Dict[str, int] = {}
         self.plan_epoch = 0
-        self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
+        self._fenced_put(PLAN_EPOCH_KEY, self.plan_epoch)
         self.refresh_plan_table()
+        self._journal_tasks()
+        self._journal_cases()
 
     def _intern_tasks(self) -> None:
         """Re-intern the task set in the shared plan cache (churn only):
@@ -132,7 +169,80 @@ class UnicronCoordinator:
         """The task set changed: indices in in-flight churn reports are
         stale.  Publish the new epoch so agents stamp future reports."""
         self.plan_epoch += 1
-        self.kv.put(PLAN_EPOCH_KEY, self.plan_epoch)
+        self._fenced_put(PLAN_EPOCH_KEY, self.plan_epoch)
+
+    # ---- journaling + incarnation fence (crash-recovery) -------------------
+
+    def _fenced_put(self, key: str, value) -> None:
+        """Write-through guarded by the incarnation fence: a coordinator
+        whose incarnation was superseded must not touch shared state."""
+        if int(self.kv.get(INCARNATION_KEY, self.incarnation)) \
+                != self.incarnation:
+            raise StaleCoordinatorError(
+                f"incarnation {self.incarnation} deposed; refusing {key}")
+        self.kv.put(key, value)
+
+    def _journal_tasks(self) -> None:
+        """Persist the task set + assignment + plan epoch.  Called after
+        every mutation, OUTSIDE the timed dispatch windows so
+        ``last_dispatch_s`` measures planning, not persistence."""
+        if not self.journal:
+            return
+        self._fenced_put(JOURNAL_TASKS_KEY, tuple(
+            (e.task, e.n_workers, e.status, e.avg_iter_s, e.state_bytes)
+            for e in self.entries))
+        self._fenced_put(JOURNAL_EPOCH_KEY, self.plan_epoch)
+
+    def _journal_cases(self) -> None:
+        if not self.journal:
+            return
+        self._fenced_put(JOURNAL_CASES_KEY, {
+            cid: (c.kind.value, int(c.severity), c.attempts)
+            for cid, c in self.open_cases.items()})
+
+    @classmethod
+    def recover(cls, kv: KVStore, hw: Hardware,
+                **kwargs) -> "UnicronCoordinator":
+        """Rebuild a coordinator from the ``/coord/journal/*`` keys after
+        a crash: task entries (with statuses and iteration stats), plan
+        epoch, open failure cases, and a refreshed ``PlanTable``.  Claims
+        a new incarnation, fencing out the crashed predecessor should it
+        wake up again.  ``kwargs`` forward to the constructor (plan
+        cache, cluster capacity, engine, ...)."""
+        journaled = kv.get(JOURNAL_TASKS_KEY)
+        if journaled is None:
+            raise RuntimeError("no coordinator journal to recover from")
+        # snapshot epoch + cases BEFORE constructing: __init__ journals
+        # its own fresh state (epoch 0, no cases) and would clobber them
+        epoch = int(kv.get(JOURNAL_EPOCH_KEY, 0))
+        cases = dict(kv.get(JOURNAL_CASES_KEY) or {})
+        tasks = [t for t, *_ in journaled]
+        assignment = [int(x) for _, x, *_ in journaled]
+        coord = cls(tasks, assignment, hw, kv=kv, **kwargs)
+        for e, (_, _, status, avg_iter_s, state_bytes) in zip(coord.entries,
+                                                              journaled):
+            e.status = status
+            e.avg_iter_s = avg_iter_s
+            e.state_bytes = state_bytes
+        coord.plan_epoch = epoch
+        coord._fenced_put(PLAN_EPOCH_KEY, coord.plan_epoch)
+        for cid, (kind, sev, attempts) in cases.items():
+            coord.open_cases[cid] = FailureCase(kind=ErrorKind(kind),
+                                                severity=Severity(sev),
+                                                attempts=attempts)
+        coord._journal_tasks()
+        coord._journal_cases()
+        return coord
+
+    def restore_assignment(self, assignment) -> None:
+        """Re-apply an exact previously-dispatched assignment (the control
+        loop's false-positive-drain rollback).  Not a planner decision —
+        no epoch bump (the task set is unchanged) and no dispatch stats;
+        the plan table is refreshed for the restored state."""
+        for e, x in zip(self.entries, assignment):
+            e.n_workers = int(x)
+        self.refresh_plan_table()
+        self._journal_tasks()
 
     def _d_running(self, n_workers: int) -> float:
         return waf_mod.expected_run_duration(self.n_cluster or n_workers,
@@ -234,16 +344,19 @@ class UnicronCoordinator:
         if case is None:
             case = FailureCase.from_kind(kind)
             self.open_cases[case_id] = case
+            self._journal_cases()
         return decide(case)
 
     def on_action_failed(self, case_id: str) -> HandlingDecision:
         """Escalate SEV3 -> SEV2 -> SEV1 (Figure 7)."""
         case = self.open_cases[case_id]
         case.record_failure()
+        self._journal_cases()
         return decide(case)
 
     def close_case(self, case_id: str) -> None:
-        self.open_cases.pop(case_id, None)
+        if self.open_cases.pop(case_id, None) is not None:
+            self._journal_cases()
 
     # ---- reconfiguration entry points (Figure 7 triggers 3..6) -----------
 
@@ -267,6 +380,7 @@ class UnicronCoordinator:
         for e, x in zip(self.entries, plan.assignment):
             e.n_workers = x
         self.refresh_plan_table()
+        self._journal_tasks()
         return plan
 
     # ---- task churn (Figure 7 triggers 5 and 6) ---------------------------
@@ -307,6 +421,7 @@ class UnicronCoordinator:
         self.plan_stats.task_finishes += 1
         self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         self.refresh_plan_table()
+        self._journal_tasks()
         return plan
 
     def task_launched(self, task: Task, n_workers_now: int,
@@ -326,6 +441,7 @@ class UnicronCoordinator:
         self.plan_stats.task_launches += 1
         self.plan_stats.last_dispatch_s = time.perf_counter() - t0
         self.refresh_plan_table()
+        self._journal_tasks()
         return plan
 
     # ---- accounting --------------------------------------------------------

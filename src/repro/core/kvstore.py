@@ -3,6 +3,32 @@
 Single-process stand-in for etcd [11]: prefix watches, leases with TTL
 (expiry driven by the simulator clock), and compare-and-swap.  The
 coordinator consolidates agent-reported process statuses here (§3.2).
+
+Delivery-semantics contract (shared with ``agent.py``/``controlloop.py``,
+exercised by ``core.chaos``):
+
+* **At-least-once publish.**  An agent ``put`` may be dropped, delayed,
+  duplicated, or rejected during a partition (``KVUnavailable``) by a
+  chaotic transport (``chaos.ChaosKVStore``).  Producers therefore keep
+  every report in a local outbox and re-publish with seeded exponential
+  backoff until the consumer acknowledges it; a record may consequently
+  be delivered more than once, and may re-appear *after* it was deleted.
+* **Idempotent consume.**  The control loop deletes a record on consume
+  (bounding KV residency) and writes a processed marker under
+  ``CONSUMED_PREFIX + key`` whose value is the consume time.  The marker
+  doubles as the producer-visible acknowledgement; a re-delivered record
+  whose marker exists is deleted without re-firing.  Markers are
+  garbage-collected after a retention window that must exceed the
+  transport's maximum delay + partition span (``chaos.ChaosSchedule``
+  generators guarantee this for generated schedules).
+* **Epoch fencing.**  The coordinator journals its state under
+  ``/coord/journal/*`` and claims an incarnation epoch; writes from a
+  deposed incarnation raise (``coordinator.StaleCoordinatorError``), so
+  a crashed-and-recovered coordinator can never be shadowed by its
+  predecessor.
+
+This base class is the *perfect* store (no loss, no delay); the chaos
+wrapper injects the failure modes while preserving this interface.
 """
 from __future__ import annotations
 
@@ -14,6 +40,19 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 # whenever the entry list mutates (finish/launch), so positional task
 # indices in agent churn reports can be checked for freshness.
 PLAN_EPOCH_KEY = "/plan/epoch"
+
+# Processed-marker namespace: the control loop acknowledges a consumed
+# record by writing ``CONSUMED_PREFIX + key`` = consume time (and deletes
+# the record itself).  Agents poll the marker to retire outbox entries.
+CONSUMED_PREFIX = "/consumed"
+
+
+class KVUnavailable(Exception):
+    """The store is unreachable from this client (network partition).
+
+    Raised only by chaotic transports (``chaos.ChaosKVStore`` node
+    clients); the base in-process store never raises it.  Producers
+    treat it as a queue-locally signal and flush on heal."""
 
 
 @dataclass
@@ -48,8 +87,14 @@ class KVStore:
                 if k.startswith(pre)}
 
     def cas(self, key: str, expect: Any, value: Any) -> bool:
-        if self.get(key) == expect:
-            self.put(key, value)
+        """Compare-and-swap the *value* only: a successful swap on a
+        leased key (e.g. a heartbeat) keeps its existing lease instead of
+        silently clearing the expiry."""
+        e = self._data.get(key)
+        if (e.value if e is not None else None) == expect:
+            self._data[key] = _Entry(value,
+                                     e.lease_expires if e else None)
+            self._notify("put", key, value)
             return True
         return False
 

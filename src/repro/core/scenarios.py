@@ -27,6 +27,15 @@ through the real detection -> severity -> planner -> transition path in
 ``mixed_fleet``
     All of the above superimposed — the §7.5-style multi-task sweep at
     (n=1024, m=32) that ``benchmarks/bench_cluster_sim.py`` reproduces.
+``chaos_schedule`` / ``chaos_suite``
+    Control-plane fault schedules (``core.chaos.ChaosSchedule``): message
+    drop / delayed visibility / duplication, per-node partition windows,
+    and scheduled coordinator crashes — the transport- and
+    coordinator-level faults the ByteDance and Meta fleet reports put
+    above hardware faults in operational pain.  Partition windows are
+    placed sequentially with heal slack and away from caller-supplied
+    ``avoid`` windows (``chaos.world_windows``), which is what makes the
+    chaos convergence property (``tests/test_chaos.py``) decidable.
 
 Generators draw from ``numpy.random.default_rng(seed)`` only: identical
 seeds produce identical scenarios, and batches of Monte-Carlo seeds are
@@ -39,6 +48,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.chaos import ChaosSchedule
 from repro.core.detection import ErrorKind
 from repro.core.traces import (DAY, NON_SEV1_KINDS, SEV1_KINDS, FailureEvent,
                                poisson_times, sample_kinds)
@@ -319,4 +329,82 @@ def scenario_suite(*, n_nodes: int, span_s: float, seed: int,
             n_nodes=n_nodes, span_s=span_s, seed=seed,
             gpus_per_node=gpus_per_node, m_initial=m_initial,
             candidates=candidates),
+    }
+
+
+# ---- control-plane chaos schedules (core.chaos) ---------------------------
+
+def chaos_schedule(*, seed: int, span_s: float, n_nodes: int,
+                   drop_p: float = 0.15, delay_p: float = 0.3,
+                   max_delay_s: float = 15.0, dup_p: float = 0.15,
+                   n_partitions: int = 2,
+                   partition_s: Tuple[float, float] = (10.0, 45.0),
+                   n_crashes: int = 1,
+                   avoid: Sequence[Tuple[float, float]] = ()
+                   ) -> ChaosSchedule:
+    """One seeded control-plane fault schedule.
+
+    Injection stops at ``end_s = 0.6 * span_s`` so the trace tail is a
+    quiescence window.  Partition windows are disjoint and sequential,
+    padded with heal slack (max delay + outbox backoff cap) and placed
+    outside the caller's ``avoid`` windows (typically
+    ``chaos.world_windows(world)``): a partition that swallows a world
+    event's delivery would turn a bounded-lag re-delivery into an
+    unbounded one and make convergence against the chaos-free run
+    undecidable.  Coordinator crashes are uniform over the injection
+    span — crash placement needs no exclusion because recovery rebuilds
+    identical coordinator state from the journal."""
+    rng = np.random.default_rng(seed)
+    end_s = 0.6 * span_s
+    guard = max_delay_s + 30.0          # heal slack: delay + backoff cap
+    parts: List[Tuple[int, float, float]] = []
+    cursor = 0.05 * span_s
+    for _ in range(n_partitions):
+        dur = float(rng.uniform(*partition_s))
+        if cursor + dur + guard >= end_s:
+            break
+        placed = None
+        for _ in range(64):
+            start = float(rng.uniform(cursor, end_s - dur - guard))
+            lo, hi = start - guard, start + dur + guard
+            if all(hi < a or lo > b for a, b in avoid):
+                placed = start
+                break
+        if placed is None:
+            break
+        node = int(rng.integers(0, n_nodes))
+        parts.append((node, placed, placed + dur))
+        cursor = placed + dur + guard
+    crashes = tuple(sorted(
+        float(t) for t in rng.uniform(0.1 * span_s, end_s,
+                                      size=n_crashes))) if n_crashes else ()
+    return ChaosSchedule(seed=seed, drop_p=drop_p, delay_p=delay_p,
+                         max_delay_s=max_delay_s, dup_p=dup_p,
+                         partitions=tuple(parts), crash_times=crashes,
+                         end_s=end_s)
+
+
+def chaos_suite(*, seed: int, span_s: float, n_nodes: int,
+                avoid: Sequence[Tuple[float, float]] = ()) -> dict:
+    """One schedule per chaos class on the same cluster shape — the
+    sweep ``bench_chaos`` and the soak test iterate: pure message drop,
+    delay + duplication (reordering falls out of unequal delays),
+    partitions, a lone coordinator crash, and everything at once."""
+    base = dict(span_s=span_s, n_nodes=n_nodes, avoid=avoid)
+    return {
+        "drop": chaos_schedule(seed=seed * 10 + 1, drop_p=0.3,
+                               delay_p=0.0, max_delay_s=0.0, dup_p=0.0,
+                               n_partitions=0, n_crashes=0, **base),
+        "delay_dup": chaos_schedule(seed=seed * 10 + 2, drop_p=0.0,
+                                    delay_p=0.5, max_delay_s=20.0,
+                                    dup_p=0.3, n_partitions=0,
+                                    n_crashes=0, **base),
+        "partition": chaos_schedule(seed=seed * 10 + 3, drop_p=0.1,
+                                    delay_p=0.2, max_delay_s=10.0,
+                                    dup_p=0.1, n_partitions=2,
+                                    n_crashes=0, **base),
+        "crash": chaos_schedule(seed=seed * 10 + 4, drop_p=0.0,
+                                delay_p=0.0, max_delay_s=0.0, dup_p=0.0,
+                                n_partitions=0, n_crashes=1, **base),
+        "full": chaos_schedule(seed=seed * 10 + 5, **base),
     }

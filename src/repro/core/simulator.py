@@ -331,7 +331,8 @@ class TraceSimulator:
                  plan_engine: str = "batched",
                  ablate_detection: bool = False,
                  ablate_transition: bool = False,
-                 ablate_replan: bool = False):
+                 ablate_replan: bool = False,
+                 chaos=None):
         """``ablate_*``: component ablations for the unicron policy —
         swap one Unicron mechanism for its baseline counterpart to
         measure that component's contribution (benchmarks/bench_ablation).
@@ -339,11 +340,23 @@ class TraceSimulator:
         tables, chains reused across rebuilds; plans stay identical).
         ``plan_engine``: the coordinator's incremental PlanTable engine
         (``"batched"`` default; ``"segtree"``/``"chain"`` are the
-        measured baselines — all three produce float-identical plans)."""
+        measured baselines — all three produce float-identical plans).
+        ``chaos``: a ``chaos.ChaosSchedule`` (duck-typed: only
+        ``crash_times`` is read) — each listed time becomes a
+        ``coord_crash`` event that kills the unicron coordinator
+        mid-trace and rebuilds a successor from its ``/coord/journal/*``
+        keys via ``UnicronCoordinator.recover``.  Message-level chaos
+        (drop/delay/duplication/partitions) lives in ``chaos.ChaosHarness``,
+        which drives the real agent->KV->control-loop path; this engine's
+        event stream bypasses message transport, so only the crash
+        component of a schedule applies here."""
         self.policy = policy
         self.ablate_detection = ablate_detection
         self.ablate_transition = ablate_transition
         self.ablate_replan = ablate_replan
+        self._chaos = chaos
+        self._plan_cache = plan_cache
+        self._plan_engine = plan_engine
         self.hw = hw
         self.eff = EFFICIENCY[policy]
         # WAF timeline sampling reads F(t, ·) straight off the memoized
@@ -516,6 +529,28 @@ class TraceSimulator:
             self._on_arrival(now, ev)
         elif kind == "finish":
             self._on_finish(now, ev)
+        elif kind == "coord_crash":
+            self._on_coord_crash(now)
+
+    def _push_crash_events(self) -> None:
+        """Schedule the chaos plan's coordinator crashes as heap events
+        (after the heap for a run exists)."""
+        if self._chaos is not None and self.coord is not None:
+            for ct in getattr(self._chaos, "crash_times", ()):
+                self._push(float(ct), "coord_crash", None)
+
+    def _on_coord_crash(self, now: float) -> None:
+        """The coordinator process dies; a successor rebuilds itself from
+        the ``/coord/journal/*`` keys.  The journal carries the complete
+        planner-relevant state, so the successor's plans — and therefore
+        the trace outcome — are identical to the crash-free run; the old
+        incarnation is fenced out should it ever wake up."""
+        if self.coord is None:
+            return
+        self.coord = UnicronCoordinator.recover(
+            self.coord.kv, self.hw, plan_cache=self._plan_cache,
+            n_cluster_workers=self._n_total, workers_per_node=self.gpn,
+            plan_engine=self._plan_engine)
 
     # ---- main loop ---------------------------------------------------------
 
@@ -530,6 +565,7 @@ class TraceSimulator:
         self._check_shape(trace)
         span = self._span = self._resolve_span(trace, span_s)
         self._heap = heap = self._event_heap(trace, span)
+        self._push_crash_events()
         acc, last_t = 0.0, 0.0
         n_events = 0
         timeline: List[Tuple[float, float]] = [(0.0, self.cluster_waf(0.0))]
@@ -707,7 +743,8 @@ class VectorSimulator(TraceSimulator):
                  plan_engine: str = "batched",
                  ablate_detection: bool = False,
                  ablate_transition: bool = False,
-                 ablate_replan: bool = False):
+                 ablate_replan: bool = False,
+                 chaos=None):
         if policy == "unicron" and plan_cache is None:
             plan_cache = PlannerCache()
         super().__init__(tasks, assignment, policy, hw, n_nodes,
@@ -715,12 +752,14 @@ class VectorSimulator(TraceSimulator):
                          plan_engine=plan_engine,
                          ablate_detection=ablate_detection,
                          ablate_transition=ablate_transition,
-                         ablate_replan=ablate_replan)
+                         ablate_replan=ablate_replan,
+                         chaos=chaos)
 
     def run(self, trace: Trace, span_s: Optional[float] = None) -> SimResult:
         self._check_shape(trace)
         span = self._span = self._resolve_span(trace, span_s)
         self._heap = heap = self._event_heap(trace, span)
+        self._push_crash_events()
         snap_t: List[float] = [0.0]
         snap_w: List[List[int]] = [[st.workers for st in self.tasks]]
         blocks: List[Tuple[int, float, float]] = []  # (slot, start, until)

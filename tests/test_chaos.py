@@ -1,0 +1,356 @@
+"""Chaos-hardened control plane: convergence under seeded fault
+injection, at-least-once delivery, idempotent consumption, coordinator
+crash-recovery, and the KV residency/lease fixes.
+
+The load-bearing property (ISSUE 6): for any seeded chaos schedule with
+finite partitions — message drop, delayed visibility, duplication,
+reordering, per-node partitions, coordinator crashes — the quiesced
+cluster assignment and WAF equal the chaos-free run's within 1e-6.
+"""
+import os
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core.agent import UnicronAgent
+from repro.core.chaos import (ChaosHarness, ChaosKVStore, ChaosSchedule,
+                              demo_world, world_windows)
+from repro.core.cluster import Cluster
+from repro.core.controlloop import ControlLoop
+from repro.core.coordinator import (INCARNATION_KEY, StaleCoordinatorError,
+                                    UnicronCoordinator)
+from repro.core.costmodel import A800, TaskModel
+from repro.core.detection import ErrorKind
+from repro.core.kvstore import CONSUMED_PREFIX, KVStore
+from repro.core.scenarios import chaos_schedule, chaos_suite
+from repro.core.waf import Task
+
+SPAN = 2600.0           # long enough for partitions to place after the
+                        # world script's avoid windows (guarded gaps)
+
+
+def _task(size: str, weight: float) -> Task:
+    return Task(model=TaskModel.from_arch(get_arch(size), global_batch=128),
+                weight=weight)
+
+
+def _fleet():
+    tasks = [_task("gpt3-1.3b", 2.0), _task("gpt3-7b", 1.4),
+             _task("gpt3-1.3b", 1.0)]
+    return tasks, [8, 8, 4], _task("gpt3-1.3b", 0.7)
+
+
+def _harness(schedule=None, seed=0):
+    tasks, assignment, launch = _fleet()
+    world = demo_world(tasks[2], launch)
+    h = ChaosHarness(tasks=tasks, assignment=assignment, hw=A800,
+                     schedule=schedule, seed=seed)
+    return h, world
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """The chaos-free reference run every chaos run must converge to."""
+    h, world = _harness()
+    res = h.run(world, until=SPAN)
+    return res, world_windows(world)
+
+
+def _assert_converged(res, free):
+    assert res.assignment == free.assignment
+    assert abs(res.waf - free.waf) < 1e-6
+    assert res.healthy_workers == free.healthy_workers
+
+
+# ---- satellite: KVStore.cas lease preservation ----------------------------
+
+
+def test_cas_preserves_lease():
+    kv = KVStore()
+    kv.put("/nodes/3/alive", 10.0, ttl=6.0, now=10.0)
+    assert kv.cas("/nodes/3/alive", 10.0, 11.0)
+    assert kv.get("/nodes/3/alive") == 11.0
+    # the lease must survive the swap: the key still expires on schedule
+    assert kv.expire(15.9) == []
+    assert kv.expire(16.0) == ["/nodes/3/alive"]
+
+
+def test_cas_on_missing_key():
+    kv = KVStore()
+    assert not kv.cas("/x", 1, 2)
+    assert kv.cas("/x", None, 2)        # expected-absent insert
+    assert kv.get("/x") == 2
+
+
+# ---- tentpole: convergence under the full chaos suite ---------------------
+
+
+def test_convergence_suite(baseline):
+    """Every chaos class — drop, delay+dup (reordering), partitions,
+    coordinator crash, and all combined — quiesces to the chaos-free
+    assignment and WAF."""
+    free, windows = baseline
+    suite = chaos_suite(seed=3, span_s=SPAN, n_nodes=6, avoid=windows)
+    assert len(suite["partition"].partitions) > 0
+    assert len(suite["full"].crash_times) > 0
+    for name, sched in suite.items():
+        h, world = _harness(schedule=sched, seed=7)
+        res = h.run(world, until=max(SPAN, sched.horizon() + 120.0))
+        assert h.quiesced(), name
+        _assert_converged(res, free)
+        if name in ("crash", "full"):
+            assert res.n_crashes >= 1
+        if name == "partition":
+            assert res.chaos_stats["rejected"] > 0
+        if name == "drop":
+            assert res.chaos_stats["dropped"] > 0
+
+
+def test_hypothesis_convergence(baseline):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    free, windows = baseline
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           drop_p=st.floats(0.0, 0.4),
+           dup_p=st.floats(0.0, 0.3),
+           n_crashes=st.integers(0, 2))
+    def prop(seed, drop_p, dup_p, n_crashes):
+        sched = chaos_schedule(seed=seed, span_s=SPAN, n_nodes=6,
+                               drop_p=drop_p, dup_p=dup_p,
+                               n_crashes=n_crashes, avoid=windows)
+        h, world = _harness(schedule=sched, seed=seed % 97)
+        res = h.run(world, until=max(SPAN, sched.horizon() + 120.0))
+        assert h.quiesced()
+        _assert_converged(res, free)
+        assert res.n_crashes == n_crashes
+
+    prop()
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_CHAOS_SOAK"),
+                    reason="set REPRO_CHAOS_SOAK=1 for the soak sweep")
+def test_chaos_soak(baseline):
+    """CI soak leg: several suite seeds back to back."""
+    free, windows = baseline
+    for seed in (11, 23, 47):
+        for name, sched in chaos_suite(seed=seed, span_s=SPAN, n_nodes=6,
+                                       avoid=windows).items():
+            h, world = _harness(schedule=sched, seed=seed)
+            res = h.run(world, until=max(SPAN, sched.horizon() + 120.0))
+            assert h.quiesced(), (seed, name)
+            _assert_converged(res, free)
+
+
+# ---- at-least-once publish / idempotent consume ---------------------------
+
+
+def test_outbox_republishes_until_acked():
+    """A dropped report is re-published with backoff until the control
+    loop's processed marker acks it."""
+    sched = ChaosSchedule(seed=1, drop_p=1.0, end_s=10.0)
+    kv = ChaosKVStore(sched)
+    agent = UnicronAgent(2, kv.bind(2), n_gpus=4, seed=5)
+    agent.report(ErrorKind.CUDA_ERROR, now=0.0)
+    assert agent.outbox_size == 1
+    assert kv.prefix("/errors/") == {}           # dropped
+    t = 0.0
+    while not kv.prefix("/errors/") and t < 60.0:
+        t += 1.0
+        agent.flush_outbox(t)                    # injection ends at 10s
+    assert kv.prefix("/errors/"), "report never got through"
+    key = next(iter(kv.prefix("/errors/")))
+    kv.delete(key)
+    kv.put(CONSUMED_PREFIX + key, t)             # the loop's ack
+    agent.flush_outbox(t + 20.0)
+    assert agent.outbox_size == 0                # retired
+
+
+def test_outbox_queues_through_partition():
+    sched = ChaosSchedule(seed=1, partitions=((2, 0.0, 30.0),), end_s=0.0)
+    kv = ChaosKVStore(sched)
+    agent = UnicronAgent(2, kv.bind(2), n_gpus=4, seed=5)
+    agent.heartbeat(5.0)                         # swallowed, no raise
+    agent.report(ErrorKind.ECC_ERROR, now=5.0)
+    assert agent.outbox_size == 1 and not kv.prefix("/errors/")
+    for t in (12.0, 20.0, 28.0, 36.0, 44.0):     # heal at 30s
+        kv.advance(t)          # the control loop's tick pumps the clock
+        agent.flush_outbox(t)
+    assert kv.prefix("/errors/")                 # flushed on heal
+
+
+def test_restarted_loop_never_double_fires():
+    """Consumption state lives in the KV: a fresh ControlLoop (post-crash)
+    sees the processed markers and treats re-delivered records as dups."""
+    tasks, assignment, _ = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    cluster = Cluster(6, 4)
+    cluster.assign(list(assignment))
+    agents = {i: UnicronAgent(i, kv, n_gpus=4) for i in range(6)}
+    loop = ControlLoop(coord, cluster, agents)
+    for a in agents.values():
+        a.heartbeat(0.0)
+    rec = agents[1].report(ErrorKind.ECC_ERROR, 0.0)           # SEV1
+    [key] = [k for k in kv.prefix("/errors/")]
+    t1 = rec["visible_at"] + 1.0
+    for a in agents.values():
+        a.heartbeat(t1)                          # keep leases alive
+    loop.tick(t1)
+    assert kv.prefix("/errors/") == {}           # delete-on-consume
+    assert cluster.healthy_workers() == 24 - 4   # node 1 drained
+    # coordinator + loop crash; successor inherits the markers
+    coord2 = UnicronCoordinator.recover(kv, A800, n_cluster_workers=24,
+                                        workers_per_node=4)
+    loop2 = ControlLoop(coord2, cluster, agents)
+    kv.put(key, rec, now=200.0)                  # late duplicate delivery
+    for a in agents.values():
+        a.heartbeat(200.0)
+    evs = loop2.tick(200.0)
+    assert evs == []                             # marker: dup is a no-op
+    assert kv.prefix("/errors/") == {}
+    assert (coord2.plan_stats.fresh_solves
+            + coord2.plan_stats.lookup_hits) == 0
+    assert cluster.healthy_workers() == 24 - 4   # still exactly one drain
+
+
+# ---- satellite: bounded KV residency over a long trace --------------------
+
+
+def test_bounded_residency_long_trace():
+    """30-day-scale report stream: consumed records are deleted and
+    markers are GC'd, so KV residency stays O(retention window), not
+    O(trace length).  (The old ``_seen`` set grew forever.)"""
+    tasks, assignment, _ = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    cluster = Cluster(6, 4)
+    cluster.assign(list(assignment))
+    agents = {i: UnicronAgent(i, kv, n_gpus=4) for i in range(6)}
+    loop = ControlLoop(coord, cluster, agents, marker_retention_s=600.0)
+    assert not hasattr(loop, "_seen")
+    # no heartbeats: this exercises the report stream in isolation (the
+    # coarse 50s cadence would otherwise churn leases every tick)
+    for i in range(400):
+        t = 50.0 * i
+        agents[i % 6].report(ErrorKind.NCCL_TIMEOUT, t)     # SEV3: benign
+        loop.tick(t + 40.0)
+    loop.tick(20200.0)                           # settle the tail report
+    assert kv.prefix("/errors/") == {}
+    n_markers = len(kv.prefix(CONSUMED_PREFIX))
+    assert n_markers <= 600.0 / 50.0 + 2         # retention window only
+    assert len(loop.events) == 400               # every report fired once
+
+
+# ---- coordinator crash-recovery + incarnation fencing ---------------------
+
+
+def test_recover_rebuilds_state():
+    tasks, assignment, launch = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    coord.task_launched(launch, 20, avg_iter_s=12.0)
+    coord.on_error("9:cuda:1", ErrorKind.CUDA_ERROR)    # left open: crash
+    back = UnicronCoordinator.recover(kv, A800, n_cluster_workers=24,
+                                      workers_per_node=4)
+    assert [e.task for e in back.entries] == [e.task for e in coord.entries]
+    assert ([e.n_workers for e in back.entries]
+            == [e.n_workers for e in coord.entries])
+    assert [e.avg_iter_s for e in back.entries] \
+        == [e.avg_iter_s for e in coord.entries]
+    assert back.plan_epoch == coord.plan_epoch
+    assert set(back.open_cases) == {"9:cuda:1"}
+    case = back.open_cases["9:cuda:1"]
+    assert case.kind is ErrorKind.CUDA_ERROR
+    # the successor plans identically: same table scenario keys and the
+    # same fresh plan for the same input
+    p1 = coord._fresh_plan(20)
+    p2 = back._fresh_plan(20)
+    assert p1.assignment == p2.assignment
+
+
+def test_incarnation_fence_rejects_deposed():
+    tasks, assignment, launch = _fleet()
+    kv = KVStore()
+    old = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                             n_cluster_workers=24, workers_per_node=4)
+    new = UnicronCoordinator.recover(kv, A800, n_cluster_workers=24,
+                                     workers_per_node=4)
+    assert new.incarnation == old.incarnation + 1
+    assert kv.get(INCARNATION_KEY) == new.incarnation
+    with pytest.raises(StaleCoordinatorError):
+        old.task_launched(launch, 20)            # journaling write fences
+    new.task_launched(launch, 20)                # successor unaffected
+
+
+def test_recover_without_journal_raises():
+    with pytest.raises(RuntimeError):
+        UnicronCoordinator.recover(KVStore(), A800)
+
+
+# ---- false-positive drain -> exact restore --------------------------------
+
+
+def test_reappearance_restores_exact_assignment():
+    """A partition-induced drain (heartbeats lost, node healthy) must be
+    rolled back to the exact pre-drain assignment when the node
+    reappears — replanning would stick elsewhere (reward hysteresis)."""
+    tasks, assignment, _ = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    cluster = Cluster(6, 4)
+    cluster.assign(list(assignment))
+    agents = {i: UnicronAgent(i, kv, n_gpus=4) for i in range(6)}
+    loop = ControlLoop(coord, cluster, agents)
+    pre = [e.n_workers for e in coord.entries]
+    for t in (0.0, 2.0, 4.0):
+        for a in agents.values():
+            a.heartbeat(t)
+        loop.tick(t)
+    # node 3 goes silent (partition): lease expires -> SEV1 drain
+    silent = 3
+    for t in (6.0, 8.0, 10.0, 12.0):
+        for i, a in agents.items():
+            if i != silent:
+                a.heartbeat(t)
+        loop.tick(t)
+    assert not cluster.nodes[silent].healthy
+    assert kv.get(f"/coord/lost/{silent}") is not None
+    assert [e.n_workers for e in coord.entries] != pre
+    dispatches = (coord.plan_stats.fresh_solves
+                  + coord.plan_stats.lookup_hits)
+    # partition heals: heartbeats resume, restore (not replan) fires
+    for t in (14.0, 16.0):
+        for a in agents.values():
+            a.heartbeat(t)
+        evs = loop.tick(t)
+    assert cluster.nodes[silent].healthy
+    assert [e.n_workers for e in coord.entries] == pre
+    assert kv.get(f"/coord/lost/{silent}") is None
+    # restore is a rollback, not a planner dispatch
+    assert (coord.plan_stats.fresh_solves
+            + coord.plan_stats.lookup_hits) == dispatches
+    assert evs == [] or evs[-1].plan_latency_s is None
+
+
+def test_duplicate_sev1_on_drained_node_is_noop():
+    tasks, assignment, _ = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    cluster = Cluster(6, 4)
+    cluster.assign(list(assignment))
+    loop = ControlLoop(coord, cluster, {})
+    loop._handle(10.0, 2, ErrorKind.LOST_CONNECTION)
+    after = [e.n_workers for e in coord.entries]
+    workers = cluster.healthy_workers()
+    ev = loop._handle(12.0, 2, ErrorKind.LOST_CONNECTION)   # duplicate
+    assert ev.plan is None
+    assert [e.n_workers for e in coord.entries] == after
+    assert cluster.healthy_workers() == workers

@@ -102,3 +102,63 @@ def test_unicron_partial_result_recompute_bounded():
     """Partial-result reuse keeps recompute below one iteration."""
     c = estimate_unicron(1e9, avg_iter_s=60.0, dp_degree=8, detect_s=0.3)
     assert c.recompute_s <= 60.0
+
+
+# ---- GEMINI preference order through the agent recovery path (§6.3) -------
+
+
+def test_agent_recovers_local_first(state):
+    from repro.core.agent import UnicronAgent
+    store = InMemoryStore(n_ranks=4)
+    store.put("t", 1, step=9, tree=state)
+    agent = UnicronAgent(1, None, n_gpus=4)     # kv unused on this path
+    got, step, src = agent.recover_checkpoint(store, "t", 1)
+    assert (step, src) == (9, "inmemory_local")
+    _close(got, state)
+
+
+def test_agent_recovers_neighbor_replica_then_persistent(tmp_path, state):
+    from repro.checkpoint import persistent as pt
+    from repro.core.agent import UnicronAgent
+    store = InMemoryStore(n_ranks=4)
+    store.put("t", 1, step=9, tree=state)
+    pt.save(str(tmp_path), 7, state)
+    agent = UnicronAgent(1, None, n_gpus=4)
+    # host 1 dies: its local copy is gone, neighbor (rank 2) holds it
+    store.drop_rank("t", 1)
+    got, step, src = agent.recover_checkpoint(store, "t", 1,
+                                              persist_dir=str(tmp_path))
+    assert (step, src) == (9, "inmemory_replica")
+    _close(got, state)
+    # neighbor also lost: only the persistent tier remains (older step)
+    store.drop_rank("t", store.neighbor(1))
+    got, step, src = agent.recover_checkpoint(store, "t", 1,
+                                              persist_dir=str(tmp_path),
+                                              template=state)
+    assert (step, src) == (7, "persistent")
+    _close(got, state)
+
+
+def test_agent_recover_no_tier_raises(state):
+    from repro.core.agent import UnicronAgent
+    agent = UnicronAgent(0, None, n_gpus=4)
+    with pytest.raises(FileNotFoundError):
+        agent.recover_checkpoint(InMemoryStore(n_ranks=2), "t", 0)
+
+
+def test_drop_rank_hosting_anothers_replica(state):
+    """Losing host 2 also loses rank *1*'s replica (held ON host 2), but
+    rank 1 still recovers from its own local copy; rank 2 recovers from
+    its replica on host 3."""
+    store = InMemoryStore(n_ranks=4)
+    store.put("t", 1, step=5, tree=state)       # replica lands on host 2
+    store.put("t", 2, step=6, tree=state)       # replica lands on host 3
+    store.drop_rank("t", 2)
+    hit1 = store.get("t", 1)
+    assert hit1 is not None and hit1[2] == "inmemory_local"
+    hit2 = store.get("t", 2)
+    assert hit2 is not None and hit2[2] == "inmemory_replica"
+    # now rank 1's host dies too: local gone AND its replica died with
+    # host 2 earlier -> nothing left for rank 1
+    store.drop_rank("t", 1)
+    assert store.get("t", 1) is None
