@@ -67,6 +67,17 @@ SPECS = {
         "higher": ("suite_speedup", "batched_speedup", "cold_plan_speedup"),
         "equal": ("waf_mean", "events"),
     },
+    "serving_slo": {
+        # policy rows carry the per-engine WAF totals on the mixed
+        # training+serving rate-event trace; the "planner" row the
+        # failure-replan trade-off (all deterministic: seeded trace,
+        # analytic objectives).  Walls and rel-err columns are not gated
+        # (rel errs are asserted < 1e-6 in-bench).
+        "keys": ("config", "policy"),
+        "equal": ("events", "scalar_waf", "plan_diff_slots",
+                  "goodput_mixed_rps", "goodput_wafonly_rps",
+                  "train_waf_mixed", "train_waf_wafonly"),
+    },
     "costmodel": {
         "keys": ("hw", "model", "workers"),
         "equal": ("agg_tflops", "dp", "tp", "pp"),

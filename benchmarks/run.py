@@ -31,10 +31,10 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-           "cluster_sim", "transition", "throughput", "waf_multitask",
-           "traces", "ablation", "roofline", "chaos"]
+           "cluster_sim", "serving_slo", "transition", "throughput",
+           "waf_multitask", "traces", "ablation", "roofline", "chaos"]
 QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-                 "cluster_sim", "transition", "chaos"]
+                 "cluster_sim", "serving_slo", "transition", "chaos"]
 
 
 def main() -> None:

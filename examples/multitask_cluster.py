@@ -3,16 +3,23 @@
 Replays a compressed failure trace against a 128-GPU cluster running six
 concurrent GPT-3 training tasks under each recovery policy, then prints
 the accumulated-WAF comparison and the Unicron coordinator's actual plan
-decisions for the first few SEV1 events.
+decisions for the first few SEV1 events.  A final section admits a
+serving task (``ServingSLO`` objective: goodput under a p99 latency SLO,
+saturating at the offered request rate) and replays the same failures to
+show the planner trading training throughput against serving goodput —
+and re-trading when the offered load steps up (``Task.objective`` swap,
+the ``scenarios.RateChangeEvent`` path).
 
     PYTHONPATH=src python examples/multitask_cluster.py
 """
+import dataclasses
+
 from repro.configs import get_arch
 from repro.core.costmodel import A800, TaskModel
 from repro.core.coordinator import UnicronCoordinator
 from repro.core.simulator import run_policies
 from repro.core.traces import trace_b
-from repro.core.waf import Task
+from repro.core.waf import ServingSLO, Task
 
 
 def main():
@@ -42,6 +49,35 @@ def main():
               f"unicron is {uni / r.accumulated_waf:4.2f}x  "
               f"(downtime {r.downtime_s / 3600:.1f}h, "
               f"{r.n_reconfigs} reconfigs)")
+
+    # ---- mixed fleet: a serving task joins (ServingSLO objective) --------
+    # weight = FLOP-equivalents per served request: the knapsack DP trades
+    # serving goodput against training throughput in one currency
+    slo = ServingSLO(rate_rps=120.0, capacity_rps=8.0)
+    serve = Task(model=tasks[0].model, weight=1e14, max_workers=40,
+                 objective=slo)
+    mixed = tasks[:4] + [serve]
+    print("\n== mixed training+serving fleet: failure replan ==")
+    coord = UnicronCoordinator(mixed, [24, 24, 24, 32, 24], A800,
+                               n_cluster_workers=128)
+    plan = coord.reconfigure(120, faulted_task=0)     # one node lost
+    served = serve.objective.value(serve, plan.assignment[-1],
+                                   A800) / serve.weight
+    print(f"  plan {plan.assignment}: serving task holds "
+          f"{plan.assignment[-1]} workers "
+          f"({served:.0f} of {slo.rate_rps:.0f} rps within SLO)")
+
+    # the offered load doubles (a RateChangeEvent in simulation): swap
+    # the objective and replan — the serving slot widens at training's
+    # expense
+    surge = dataclasses.replace(serve, objective=slo.with_rate(240.0))
+    coord.task_updated(4, surge)
+    plan2 = coord.reconfigure(120, faulted_task=None)
+    served2 = surge.objective.value(surge, plan2.assignment[-1],
+                                    A800) / surge.weight
+    print(f"  rate 120 -> 240 rps: plan {plan2.assignment}, serving "
+          f"task now {plan2.assignment[-1]} workers "
+          f"({served2:.0f} of 240 rps within SLO)")
 
 
 if __name__ == "__main__":

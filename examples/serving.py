@@ -4,7 +4,10 @@ Part 1 serves batched requests through the static RequestBatcher for a
 dense-GQA arch and the attention-free SSM arch (O(1) decode state — the
 long_500k path).  Part 2 runs the vLLM-style continuous batcher: six
 requests of different lengths share two lanes, joining and leaving
-mid-flight (per-lane decode positions).
+mid-flight (per-lane decode positions); one poisoned request is evicted
+(lane failure -> lane recycled) and the batcher's lane-outcome counters
+calibrate the planner-side ``ServingSLO`` objective — the feedback loop
+between decode-path health and cluster-level worker assignment.
 
     PYTHONPATH=src python examples/serving.py
 """
@@ -53,12 +56,24 @@ def main():
                                     cfg.vocab)
         cb.submit(Request(req_id=i, prompt=prompt, max_new=5 + i))
     t0 = time.time()
+    cb.step()                      # admits the first two requests
+    cb.evict(0)                    # req 0 is poisoned: lane failure
     done = cb.run()
     print(f"\ncontinuous batching: {len(done)} requests over 2 lanes in "
           f"{cb.steps} fused steps ({time.time() - t0:.1f}s)")
     for r in sorted(done, key=lambda r: r.req_id):
         print(f"  req{r.req_id} ({r.prompt.shape[0]} prompt toks -> "
               f"{len(r.out)} new): {r.out}")
+
+    # ---- lane stats -> planner objective calibration ---------------------
+    from repro.core.waf import ServingSLO
+    stats = cb.slo_stats()
+    slo = ServingSLO(rate_rps=120.0).calibrated(stats)
+    print(f"\nslo_stats: {stats}")
+    print(f"calibrated ServingSLO: lane_fail_discount="
+          f"{slo.lane_fail_discount:.3f} (per-worker capacity "
+          f"{slo.capacity_rps * (1 - slo.lane_fail_discount):.2f} rps "
+          f"of {slo.capacity_rps:.0f})")
 
 
 if __name__ == "__main__":

@@ -123,7 +123,9 @@ class UnicronCoordinator:
         this coordinator after a crash.  On by default; benchmarks turn
         it off to measure the journaling overhead."""
         self.hw = hw
-        self.plan_engine = plan_engine
+        # normalize through the registry so legacy spellings resolve (and
+        # typos fail) at construction, not at the first reconfigure
+        self.plan_engine = planner.resolve_engine(plan_engine)
         self.prebuild_scenarios = prebuild_scenarios
         self.kv = kv or KVStore()
         self.journal = journal
@@ -133,7 +135,7 @@ class UnicronCoordinator:
         self.kv.put(INCARNATION_KEY, self.incarnation)
         self.entries: List[TaskEntry] = [
             TaskEntry(task=t, n_workers=x,
-                      state_bytes=16.0 * t.model.n_params)
+                      state_bytes=waf_mod.state_bytes(t))
             for t, x in zip(tasks, assignment)]
         self.mtbf = mtbf_per_worker_s
         self.d_transition = d_transition_s
@@ -424,6 +426,20 @@ class UnicronCoordinator:
         self._journal_tasks()
         return plan
 
+    def task_updated(self, task_index: int, task: Task) -> None:
+        """Reward-only task swap (a serving task's offered load stepped —
+        ``scenarios.RateChangeEvent``): workers stay put, nothing is
+        dispatched and no epoch bump (slot indices are unchanged, so
+        in-flight churn reports stay valid).  The entry's task and
+        transition payload are replaced and the lookahead table refreshed
+        so the NEXT trigger plans against the updated reward rows."""
+        e = self.entries[task_index]
+        e.task = task
+        e.state_bytes = waf_mod.state_bytes(task)
+        self._intern_tasks()
+        self.refresh_plan_table()
+        self._journal_tasks()
+
     def task_launched(self, task: Task, n_workers_now: int,
                       avg_iter_s: float = 30.0) -> Plan:
         """Trigger (6): admit a task (x_old = 0) and replan the whole
@@ -431,7 +447,7 @@ class UnicronCoordinator:
         is always a fresh solve (memoized under a plan cache)."""
         self.entries.append(TaskEntry(task=task, n_workers=0,
                                       avg_iter_s=avg_iter_s,
-                                      state_bytes=16.0 * task.model.n_params))
+                                      state_bytes=waf_mod.state_bytes(task)))
         self._intern_tasks()
         self._bump_epoch()
         t0 = time.perf_counter()

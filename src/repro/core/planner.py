@@ -4,14 +4,39 @@ Knapsack-style dynamic program over (tasks x workers):
 
     S(i, j) = max_k { S(i-1, j-k) + G(t_i, k) }           (Eq. 5)
 
+Reward rows G(t_i, ·) are produced by each task's *objective*
+(``waf.Objective`` — training WAF by default, serving goodput/SLO for
+inference tasks): the planner consumes ``waf.reward`` scalars and
+``waf.reward_curve`` vectors without knowing which objective built
+them.  The only row property the engines rely on is the **band
+contract** (see ``core.waf``): rows are flat past each task's
+``max_workers`` cap.  Rows need not be monotone — the *DP value
+vectors* the banded kernels take as ``prev`` are made monotone
+non-decreasing at the leaves (running maxima) and stay monotone under
+max-plus merging, and that is what the band proof requires.
+
 Two solver paths share the recurrence:
 
-* ``solve`` — the vectorized engine: reward rows come out of the memoized
-  cost-model sweep as whole vectors (``waf.reward_curve``), and the DP inner
-  loop is a max-plus convolution evaluated as one NumPy windowed matrix per
-  task (O(n^2) cells but a single vector op), with argmax traceback.
-* ``solve_reference`` — the original pure-Python scalar DP, kept as the
-  ground truth for property tests and the speedup baseline.
+* ``solve`` — the vectorized engine: reward rows come out of the
+  objective's vectorized curve as whole vectors (``waf.reward_curve``),
+  and the DP inner loop is a max-plus convolution evaluated as one NumPy
+  windowed matrix per task (O(n^2) cells but a single vector op), with
+  argmax traceback.
+* ``solve_reference`` — the original pure-Python scalar DP over the
+  objective's scalar ``value``, kept as the ground truth for property
+  tests and the speedup baseline.
+
+Engine registry
+---------------
+``engines()`` is the single discovery point for the planner's engine and
+backend axes.  ``engine=`` (values from ``engines()["engine"]``:
+``"batched"``/``"segtree"``/``"chain"``/``"reference"``) is the one
+canonical spelling, accepted by ``PlanTable``/``PlannerCache.table``
+directly and as the value of the simulators'/coordinator's
+``plan_engine=`` kwarg (named to coexist with ``run_monte_carlo``'s
+*simulator*-axis ``engine=``).  The historical ``solver=`` /
+``incremental=False`` kwargs are deprecated shims for
+``engine="reference"`` and are normalized by ``resolve_engine``.
 
 Max-plus kernel family
 ----------------------
@@ -109,7 +134,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import waf as waf_mod
-from repro.core.costmodel import Hardware, TaskModel
+from repro.core.costmodel import Hardware
 from repro.core.waf import Task
 
 NEG = float("-inf")
@@ -133,11 +158,13 @@ class Plan:
 
 
 def _vector_capable(tasks: Sequence) -> bool:
-    """Reward rows can be built from the cost-model sweep (real ``Task``s
-    with analytic ``TaskModel``s).  Duck-typed tasks — e.g. the tabulated
-    tasks the property tests use with a monkeypatched ``waf`` — fall back
-    to the scalar row builder so they keep their custom semantics."""
-    return all(isinstance(t, Task) and isinstance(t.model, TaskModel)
+    """Reward rows can be built from the objective's vectorized curve
+    (real ``Task``s whose objective declares itself vector-capable — the
+    default ``TrainingWAF`` requires an analytic ``TaskModel``).
+    Duck-typed tasks — e.g. the tabulated tasks the property tests use
+    with a monkeypatched ``waf`` — fall back to the scalar row builder
+    so they keep their custom semantics."""
+    return all(isinstance(t, Task) and t.objective.vector_capable(t)
                for t in tasks)
 
 
@@ -368,6 +395,64 @@ def get_maxplus_backend() -> str:
     return env or "numpy"
 
 
+# ---------------------------------------------------------------------------
+# Engine registry: the single discovery point for the planner's engine and
+# backend axes (see the module docstring's "Engine registry" section).
+# ---------------------------------------------------------------------------
+
+ENGINES = ("batched", "segtree", "chain", "reference")
+
+_ENGINE_DESCRIPTIONS = {
+    "batched": "level-synchronous stacked dyadic tree; value-only "
+               "rebuilds + lazy traceback (default)",
+    "segtree": "per-node dyadic segment tree, O(log m) churn "
+               "invalidation, one kernel call per merge",
+    "chain": "prefix/suffix DP chains; the preserved churn-rebuild "
+             "baseline",
+    "reference": "non-incremental per-scenario solves (scalar "
+                 "solve_reference by default); the ground-truth path",
+}
+
+_BACKEND_DESCRIPTIONS = {
+    "numpy": "float64 fused numpy kernels (default)",
+    "pallas": "float32 Pallas TPU kernels (interpret off-TPU); "
+              "set_maxplus_backend('pallas') or "
+              "REPRO_PLANNER_BACKEND=pallas",
+}
+
+
+def engines() -> Dict[str, Dict[str, str]]:
+    """The planner's engine/backend registry.
+
+    Returns ``{"engine": {name: description}, "backend": {...}}``.  The
+    ``engine`` axis is spelled ``engine=`` on ``PlanTable`` /
+    ``PlannerCache.table`` and ``plan_engine=`` on the simulators and
+    ``UnicronCoordinator`` (same values; the kwarg differs only because
+    ``run_monte_carlo``'s ``engine=`` already names the simulator axis).
+    The ``backend`` axis is the process-wide max-plus kernel switch
+    (``set_maxplus_backend`` / ``REPRO_PLANNER_BACKEND``)."""
+    return {"engine": dict(_ENGINE_DESCRIPTIONS),
+            "backend": dict(_BACKEND_DESCRIPTIONS)}
+
+
+def resolve_engine(engine: Optional[str] = None, *,
+                   solver=None, incremental: bool = True,
+                   default: str = "batched") -> str:
+    """Normalize the historical spellings of the engine axis to one
+    canonical name from ``engines()["engine"]``.
+
+    ``solver=`` (any non-None per-scenario solver) and
+    ``incremental=False`` are deprecated shims for
+    ``engine="reference"``; an explicit ``engine=`` name passes through
+    unchanged otherwise.  Unknown names raise ``ValueError``."""
+    if engine is not None and engine not in ENGINES:
+        raise ValueError(f"unknown PlanTable engine {engine!r}; "
+                         f"choose from {ENGINES}")
+    if solver is not None or not incremental:
+        return "reference"
+    return engine if engine is not None else default
+
+
 def _conv_vals(prev: np.ndarray, g: np.ndarray,
                band: Optional[int] = None) -> np.ndarray:
     """Backend-dispatched banded max-plus value kernel (segment-tree
@@ -521,7 +606,8 @@ class PlanTable:
     solves (the reference path the tests and benchmarks compare against).
     """
 
-    ENGINES = ("batched", "segtree", "chain")
+    #: canonical engine names — aliases the module-level registry tuple
+    ENGINES = ENGINES
 
     def __init__(self, tasks: Sequence[Task], assignment: Sequence[int],
                  hw: Hardware, d_running: float, d_transition: float,
@@ -529,26 +615,31 @@ class PlanTable:
                  solver=None, lazy: bool = False,
                  cache: Optional["PlannerCache"] = None,
                  n_budget: Optional[int] = None,
-                 engine: str = "batched"):
-        """``incremental=False`` falls back to one full solve per scenario;
-        ``solver`` then picks the per-scenario solver (default ``solve``;
-        pass ``solve_reference`` for the all-scalar baseline).
+                 engine: Optional[str] = None):
+        """``engine`` (canonical axis, values from
+        ``engines()["engine"]``): ``"batched"`` (default;
+        level-synchronous stacked merges, shared complement sweep,
+        value-only assembly with lazy traceback), ``"segtree"`` (the
+        PR-3 per-node dyadic tree, O(log m) invalidation per churn step,
+        one kernel call per merge), ``"chain"`` (the PR-2 prefix/suffix
+        DP chains, kept as the churn-rebuild baseline) or
+        ``"reference"`` (non-incremental: one full ``solve_reference``
+        solve per scenario — the all-scalar ground truth).
 
-        ``engine``: ``"batched"`` (default; level-synchronous stacked
-        merges, shared complement sweep, value-only assembly with lazy
-        traceback), ``"segtree"`` (the PR-3 per-node dyadic tree,
-        O(log m) invalidation per churn step, one kernel call per merge)
-        or ``"chain"`` (the PR-2 prefix/suffix DP chains, kept as the
-        churn-rebuild baseline).
+        Deprecated shims, normalized by ``resolve_engine``:
+        ``incremental=False`` falls back to one full solve per scenario
+        (historical default solver: vectorized ``solve``), and a
+        non-None ``solver=`` picks the per-scenario solver; both resolve
+        to the ``"reference"`` engine.
 
         ``n_budget``: size the DP value arrays for this many workers (>=
         the largest scenario budget).  Plans are unchanged — every
         scenario argmax is sliced to its own budget — but a *fixed*
         budget (e.g. cluster capacity + one node) keeps chain-cache keys
         and array shapes identical across rebuilds at different totals."""
-        if engine not in self.ENGINES:
-            raise ValueError(f"unknown PlanTable engine {engine!r}; "
-                             f"choose from {self.ENGINES}")
+        requested = engine
+        engine = resolve_engine(engine, solver=solver,
+                                incremental=incremental)
         self.tasks = tuple(tasks)
         self.assignment = tuple(assignment)
         self.hw = hw
@@ -557,7 +648,13 @@ class PlanTable:
         self.workers_per_fault = workers_per_fault  # a node drain = 8 GPUs
         self.n_budget = n_budget
         self.engine = engine
-        self._solver = solver or solve
+        if engine == "reference" and requested == "reference":
+            # the canonical spelling defaults to the scalar ground truth;
+            # the incremental=False shim keeps its historical vectorized
+            # per-scenario default
+            self._solver = solver or solve_reference
+        else:
+            self._solver = solver or solve
         self._cache = cache
         self.table: Dict[str, Plan] = {}
         # batched-engine accounting (zeros for the other engines):
@@ -565,7 +662,7 @@ class PlanTable:
         # plans materialized by on-demand traceback.
         self.batch_stats: Dict[str, int] = {"levels": 0, "launches": 0,
                                             "tracebacks": 0}
-        self._incremental = (incremental and solver is None
+        self._incremental = (engine != "reference"
                              and len(self.tasks) > 0
                              and _vector_capable(self.tasks))
         if self._incremental:
@@ -1470,18 +1567,20 @@ class PlannerCache:
               hw: Hardware, d_running: float, d_transition: float,
               workers_per_fault: int = 8,
               n_budget: Optional[int] = None,
-              engine: str = "batched",
+              engine: Optional[str] = None,
               task_ids: Optional[Tuple[int, ...]] = None,
               prebuild: bool = False) -> PlanTable:
         """A lazy PlanTable for this cluster state, memoized by state.
-        ``task_ids``: the already-interned ``task_id`` tuple for ``tasks``
-        (callers that refresh per event keep it across rebuilds — the
-        task set only changes on churn).  ``prebuild=True`` runs the
-        whole-table value rebuild before returning (idempotent; on the
-        batched engine a constant number of stacked launches per tree
-        level, value-only — no tracebacks): churn-driven coordinators use
-        it to restore O(1)-ish dispatch for every scenario after a task
-        set change."""
+        ``engine``: canonical name from ``engines()["engine"]`` (default
+        ``"batched"``; part of the memo key).  ``task_ids``: the
+        already-interned ``task_id`` tuple for ``tasks`` (callers that
+        refresh per event keep it across rebuilds — the task set only
+        changes on churn).  ``prebuild=True`` runs the whole-table value
+        rebuild before returning (idempotent; on the batched engine a
+        constant number of stacked launches per tree level, value-only —
+        no tracebacks): churn-driven coordinators use it to restore
+        O(1)-ish dispatch for every scenario after a task set change."""
+        engine = resolve_engine(engine)
         tasks, assignment = tuple(tasks), tuple(assignment)
         if task_ids is None:
             task_ids = tuple(self.task_id(t) for t in tasks)

@@ -24,6 +24,13 @@ through the real detection -> severity -> planner -> transition path in
 ``task_churn``
     Multi-task join/finish churn, the Figure 7 reconfiguration triggers
     (5) task finished and (6) task launched at cluster scale (§5.2).
+``diurnal_load`` / ``traffic_spikes``
+    Request-rate traces for serving tasks (``waf.ServingSLO``): a
+    sinusoidal day/night cycle sampled as piecewise-constant steps, and
+    short multiplicative traffic spikes.  Each step is a
+    :class:`RateChangeEvent` that swaps the slot's objective (rate only;
+    workers are untouched), so the planner's next failure replan trades
+    training WAF against the *current* serving goodput.
 ``mixed_fleet``
     All of the above superimposed — the §7.5-style multi-task sweep at
     (n=1024, m=32) that ``benchmarks/bench_cluster_sim.py`` reproduces.
@@ -52,7 +59,7 @@ from repro.core.chaos import ChaosSchedule
 from repro.core.detection import ErrorKind
 from repro.core.traces import (DAY, NON_SEV1_KINDS, SEV1_KINDS, FailureEvent,
                                poisson_times, sample_kinds)
-from repro.core.waf import Task
+from repro.core.waf import Objective, ServingSLO, Task
 
 
 @dataclass(frozen=True)
@@ -79,6 +86,19 @@ class TaskFinish:
     """Task in simulator slot ``slot`` completes (Figure 7 trigger 5)."""
     time: float
     slot: int
+
+
+@dataclass(frozen=True)
+class RateChangeEvent:
+    """The offered load of the task in simulator slot ``slot`` changes:
+    the slot's task swaps to an identical task carrying ``objective``
+    (typically a :class:`~repro.core.waf.ServingSLO` at a new
+    ``rate_rps``).  Reward-only — no workers move, no transition cost is
+    paid, and no replan is triggered; the updated reward rows simply
+    shape the planner's *next* reconfiguration."""
+    time: float
+    slot: int
+    objective: Objective
 
 
 @dataclass(frozen=True)
@@ -264,12 +284,63 @@ def task_churn(*, span_s: float, seed: int, n_nodes: int,
                                           size=n_arrivals)):
         cand = candidates[int(pick)]
         hint = workers_hint
-        if getattr(cand, "max_workers", None) is not None:
+        if cand.max_workers is not None:
             hint = min(hint, cand.max_workers)
         churn.append(TaskArrival(time=float(t), task=cand,
                                  workers_hint=hint))
     churn.sort(key=lambda e: e.time)
     return ClusterScenario("churn", n_nodes, gpus_per_node, span_s,
+                           churn=churn, seed=seed)
+
+
+def diurnal_load(*, n_nodes: int, span_s: float, seed: int, slot: int,
+                 base: ServingSLO, gpus_per_node: int = 8,
+                 amplitude: float = 0.5, period_s: float = DAY,
+                 step_s: float = 3600.0, jitter: float = 0.05
+                 ) -> ClusterScenario:
+    """Diurnal request-rate trace for one serving slot: a day/night sine
+    around ``base.rate_rps`` (peak-to-trough set by ``amplitude``),
+    sampled as piecewise-constant ``step_s`` steps with seeded
+    multiplicative jitter.  Each step is a reward-only
+    :class:`RateChangeEvent`."""
+    rng = np.random.default_rng(seed)
+    times = np.arange(step_s, span_s, step_s)
+    phase = float(rng.uniform(0.0, period_s))
+    level = 1.0 + amplitude * np.sin(2.0 * np.pi * (times + phase)
+                                     / period_s)
+    noise = np.clip(rng.normal(1.0, jitter, size=times.size), 0.1, None)
+    rates = np.maximum(base.rate_rps * level * noise, 1e-3)
+    churn: List[object] = [
+        RateChangeEvent(time=float(t), slot=slot,
+                        objective=base.with_rate(float(r)))
+        for t, r in zip(times, rates)]
+    return ClusterScenario("diurnal", n_nodes, gpus_per_node, span_s,
+                           churn=churn, seed=seed)
+
+
+def traffic_spikes(*, n_nodes: int, span_s: float, seed: int, slot: int,
+                   base: ServingSLO, gpus_per_node: int = 8,
+                   n_spikes: int = 3, spike_factor: float = 4.0,
+                   spike_s: float = 1800.0) -> ClusterScenario:
+    """Short traffic spikes for one serving slot: ``n_spikes`` disjoint
+    windows of ``spike_s`` seconds at ``spike_factor`` times the base
+    rate; each window's trailing edge restores ``base`` exactly."""
+    rng = np.random.default_rng(seed)
+    starts = np.sort(rng.uniform(0.05 * span_s, 0.85 * span_s,
+                                 size=n_spikes))
+    churn: List[object] = []
+    prev_end = -np.inf
+    for onset in starts:
+        t0 = max(float(onset), prev_end + 60.0)
+        t1 = min(t0 + spike_s, span_s - 1.0)
+        if t1 <= t0:
+            continue
+        churn.append(RateChangeEvent(
+            time=t0, slot=slot,
+            objective=base.with_rate(base.rate_rps * spike_factor)))
+        churn.append(RateChangeEvent(time=t1, slot=slot, objective=base))
+        prev_end = t1
+    return ClusterScenario("spikes", n_nodes, gpus_per_node, span_s,
                            churn=churn, seed=seed)
 
 

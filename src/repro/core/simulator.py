@@ -54,6 +54,7 @@ at the end of the run is the Fig. 11b/d number.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import time as _time
 from bisect import bisect_left, bisect_right
@@ -71,7 +72,7 @@ from repro.core.detection import (ErrorKind, FleetMonitor, Severity,
 from repro.core.handling import Trigger
 from repro.core.planner import PlannerCache
 from repro.core.scenarios import (ClusterScenario, DegradationEvent,
-                                  TaskArrival, TaskFinish)
+                                  RateChangeEvent, TaskArrival, TaskFinish)
 from repro.core.traces import FailureEvent, trace_span
 from repro.core.waf import Task
 
@@ -175,23 +176,57 @@ def _event_entries(trace: Trace,
             seq += 1
     for c in churn:
         if c.time <= span:
-            kind = "arrive" if isinstance(c, TaskArrival) else "finish"
+            if isinstance(c, TaskArrival):
+                kind = "arrive"
+            elif isinstance(c, RateChangeEvent):
+                kind = "rate"
+            else:
+                kind = "finish"
             entries.append((c.time, seq, kind, c))
             seq += 1
     return entries, seq
 
 
+def _rate_epoch_stack(tasks: List[Task],
+                      rate_log: List[Tuple[float, int, Task, Task]],
+                      n: int, hw) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-epoch WAF matrices for a trace whose tasks swapped objectives
+    mid-span (``RateChangeEvent``): returns ``(epoch_t, F)`` where
+    ``epoch_t[e]`` is when epoch ``e`` begins and ``F[e]`` is its
+    (m, n+1) reward matrix.  ``tasks`` is the FINAL task list;
+    ``rate_log`` holds (time, slot, old, new) entries in dispatch order
+    and is rewound to recover each epoch's task list."""
+    cur = list(tasks)
+    for _, slot, old, _new in reversed(rate_log):
+        cur[slot] = old
+    epoch_t = [0.0]
+    lists = [list(cur)]
+    for t, slot, _old, new in rate_log:
+        cur = list(cur)
+        cur[slot] = new
+        epoch_t.append(t)
+        lists.append(cur)
+    F = np.stack([waf_mod.waf_matrix(ts, n, hw) for ts in lists])
+    return np.asarray(epoch_t), F
+
+
 def _integrate_segments(snap_t: List[float], snap_w: List[List[int]],
                         blocks: List[Tuple[int, float, float]],
                         slows: List[List[Tuple[float, float, float]]],
-                        span: float, F: np.ndarray):
+                        span: float, F: np.ndarray,
+                        epoch_t: Optional[np.ndarray] = None):
     """One numpy pass over one policy's recorded step functions: segment
     boundaries from events + block expiries + slow-window edges; rates are
     a gather out of the eff-scaled (m, n+1) WAF matrix ``F``, masked by
-    blocks, divided by slow factors.  Returns (accumulated, timeline)."""
-    m = F.shape[0]
+    blocks, divided by slow factors.  With ``epoch_t``, ``F`` is an
+    (E, m, n+1) epoch stack (reward rows changed mid-trace via rate
+    events) and each segment gathers from the epoch holding its start.
+    Returns (accumulated, timeline)."""
+    m = F.shape[-2]
     edges = {0.0, span}
     edges.update(t for t in snap_t if 0.0 < t < span)
+    if epoch_t is not None:
+        edges.update(float(t) for t in epoch_t if 0.0 < t < span)
     for _, start, until in blocks:
         if start < span:
             edges.add(max(start, 0.0))
@@ -212,7 +247,11 @@ def _integrate_segments(snap_t: List[float], snap_w: List[List[int]],
     for r, w in enumerate(snap_w):
         W[r, :len(w)] = w
     Wseg = W[idx]                                   # (S, m)
-    rate = F[np.arange(m)[None, :], Wseg]           # (S, m)
+    if epoch_t is None:
+        rate = F[np.arange(m)[None, :], Wseg]       # (S, m)
+    else:
+        eidx = np.searchsorted(epoch_t, bounds[:-1], side="right") - 1
+        rate = F[eidx[:, None], np.arange(m)[None, :], Wseg]
     scale = np.ones_like(rate)
     for slot, start, until in blocks:
         if start >= span:
@@ -245,16 +284,20 @@ def _integrate_segments(snap_t: List[float], snap_w: List[List[int]],
 def _integrate_policies(snap_t: List[float], snaps: List[np.ndarray],
                         blocks, slows, span: float, F: np.ndarray,
                         effs: np.ndarray,
-                        timeline_t: Optional[List[float]] = None):
+                        timeline_t: Optional[List[float]] = None,
+                        epoch_t: Optional[np.ndarray] = None):
     """The multi-policy counterpart of ``_integrate_segments``: one shared
     edge set (the union of every policy's breakpoints — extra edges only
     split constant segments, so totals agree with the per-policy pass to
     float reordering), one (S, P, m) gather, per-policy block/slow masks.
     ``blocks[p]`` is a (slots, starts, untils) triple of parallel lists.
-    Returns (accs (P,), timelines per policy)."""
-    P, m = effs.size, F.shape[0]
+    With ``epoch_t``, ``F`` is an (E, m, n+1) rate-epoch stack (see
+    ``_integrate_segments``).  Returns (accs (P,), timelines per policy)."""
+    P, m = effs.size, F.shape[-2]
     st_arr = np.array(snap_t)
     parts = [st_arr, np.array((0.0, span))]
+    if epoch_t is not None:
+        parts.append(epoch_t[(epoch_t > 0.0) & (epoch_t < span)])
     barrs = []
     for p in range(P):
         bslots, bstarts, buntils = blocks[p]
@@ -276,7 +319,12 @@ def _integrate_policies(snap_t: List[float], snaps: List[np.ndarray],
     for r, w in enumerate(snaps):
         W[r, :, :w.shape[1]] = w
     Wseg = W[idx]                                   # (S, P, m)
-    rate = F[np.arange(m)[None, None, :], Wseg] * effs[None, :, None]
+    if epoch_t is None:
+        rate = F[np.arange(m)[None, None, :], Wseg] * effs[None, :, None]
+    else:
+        eidx = np.searchsorted(epoch_t, bounds[:-1], side="right") - 1
+        rate = (F[eidx[:, None, None], np.arange(m)[None, None, :], Wseg]
+                * effs[None, :, None])
     scale = np.ones_like(rate)
     for p in range(P):
         sl, st, un = barrs[p]
@@ -388,6 +436,8 @@ class TraceSimulator:
         self._heap: List[Tuple[float, int, str, object]] = []
         self._seq = 0
         self._span = float("inf")
+        # objective swaps applied so far: (time, slot, old_task, new_task)
+        self._rate_log: List[Tuple[float, int, Task, Task]] = []
 
     # ---- instantaneous cluster WAF ----------------------------------------
 
@@ -429,7 +479,7 @@ class TraceSimulator:
 
     def _transition_s(self, st: SimTask, detect_s: float,
                       sev: Severity) -> float:
-        state_bytes = 16.0 * st.task.model.n_params
+        state_bytes = waf_mod.state_bytes(st.task)
         if self.policy == "unicron" and self.ablate_transition:
             c = transition.estimate_baseline(
                 state_bytes, detect_s, dynamic_reconfig=False,
@@ -529,6 +579,8 @@ class TraceSimulator:
             self._on_arrival(now, ev)
         elif kind == "finish":
             self._on_finish(now, ev)
+        elif kind == "rate":
+            self._on_rate(now, ev)
         elif kind == "coord_crash":
             self._on_coord_crash(now)
 
@@ -700,6 +752,28 @@ class TraceSimulator:
             st.workers = grant - grant % self.gpn
         self.cluster.assign([t.workers for t in self.tasks])
 
+    def _on_rate(self, now: float, ev: RateChangeEvent) -> None:
+        """Reward-only objective swap (serving rate step): no workers
+        move and no transition is charged — the slot's task is replaced
+        so sampling/integration read the new reward rows, and the
+        coordinator's lookahead tables refresh so the NEXT failure's
+        replan trades against the current offered load."""
+        if not 0 <= ev.slot < len(self.tasks):
+            return
+        st = self.tasks[ev.slot]
+        if not st.active:
+            return
+        old = st.task
+        new = dataclasses.replace(old, objective=ev.objective)
+        if new == old:
+            return
+        st.task = new
+        self._rate_log.append((now, ev.slot, old, new))
+        if self._use_planner():
+            ci = self._ci[ev.slot]
+            if ci is not None:
+                self.coord.task_updated(ci, new)
+
     def _on_finish(self, now: float, ev: TaskFinish) -> None:
         if not 0 <= ev.slot < len(self.tasks):
             return
@@ -794,11 +868,18 @@ class VectorSimulator(TraceSimulator):
                           span: float):
         """One numpy pass: segment boundaries from events + block expiries
         + slow-window edges; per-segment rates are a gather out of the
-        (m, n+1) WAF matrix, masked by blocks, divided by slow factors."""
+        (m, n+1) WAF matrix, masked by blocks, divided by slow factors.
+        Rate events promote the matrix to an (E, m, n+1) epoch stack."""
+        slows = [st.slow for st in self.tasks]
+        if self._rate_log:
+            epoch_t, F = _rate_epoch_stack(
+                [st.task for st in self.tasks], self._rate_log,
+                self._n_total, self.hw)
+            return _integrate_segments(snap_t, snap_w, blocks, slows,
+                                       span, F * self.eff, epoch_t=epoch_t)
         F = waf_mod.waf_matrix([st.task for st in self.tasks],
                                self._n_total, self.hw) * self.eff
-        return _integrate_segments(snap_t, snap_w, blocks,
-                                   [st.slow for st in self.tasks], span, F)
+        return _integrate_segments(snap_t, snap_w, blocks, slows, span, F)
 
 
 class BatchSimulator:
@@ -852,7 +933,7 @@ class BatchSimulator:
         self._tasks: List[Task] = list(tasks)
         M = len(self._tasks)
         self._avg = np.full(M, 30.0)              # SimTask.avg_iter_s
-        self._sbytes = np.array([16.0 * t.model.n_params
+        self._sbytes = np.array([waf_mod.state_bytes(t)
                                  for t in self._tasks])
         self._workers = np.tile(np.asarray(assignment, dtype=np.int64),
                                 (P, 1))
@@ -904,6 +985,8 @@ class BatchSimulator:
         self._seq = 0
         self._span = float("inf")
         self._mutated = False
+        # objective swaps applied so far: (time, slot, old_task, new_task)
+        self._rate_log: List[Tuple[float, int, Task, Task]] = []
 
     # ---- per-lane cluster state -------------------------------------------
 
@@ -1195,7 +1278,7 @@ class BatchSimulator:
         self._tasks.append(ev.task)
         self._avg = np.append(self._avg, avg)
         self._sbytes = np.append(self._sbytes,
-                                 16.0 * ev.task.model.n_params)
+                                 waf_mod.state_bytes(ev.task))
         self._active = np.append(self._active, True)
         self._workers = np.concatenate(
             [self._workers, np.zeros((P, 1), dtype=np.int64)], axis=1)
@@ -1273,6 +1356,35 @@ class BatchSimulator:
             self._apply_plan(p)
             self._reconfigs[p] += 1
 
+    def _on_rate(self, now: float, ev: RateChangeEvent,
+                 mask: np.ndarray) -> None:
+        """Reward-only objective swap (see ``TraceSimulator._on_rate``).
+        The task list is shared across lanes, so a rate step always
+        applies fleet-wide; only planner lanes carry extra state (their
+        coordinators' lookahead tables refresh for the next replan)."""
+        if not 0 <= ev.slot < len(self._tasks):
+            return
+        if not self._active[ev.slot]:
+            return
+        old = self._tasks[ev.slot]
+        new = dataclasses.replace(old, objective=ev.objective)
+        if new == old:
+            return
+        self._tasks[ev.slot] = new
+        self._sbytes[ev.slot] = waf_mod.state_bytes(new)
+        self._tids[ev.slot] = self._task_sigs.setdefault(
+            new, len(self._task_sigs))
+        self._kind_T.clear()               # transition column changed
+        self._rate_log.append((now, ev.slot, old, new))
+        lanes = (self._all_list if mask is self._all_lanes
+                 else np.flatnonzero(mask).tolist())
+        for p, coord in self._coords.items():
+            if p not in lanes:
+                continue
+            ci = self._cis[p][ev.slot]
+            if ci is not None:
+                coord.task_updated(ci, new)
+
     # ---- main loop ---------------------------------------------------------
 
     def _push(self, t: float, kind: str, payload: object,
@@ -1293,6 +1405,8 @@ class BatchSimulator:
             self._on_arrival(now, ev, mask)
         elif kind == "finish":
             self._on_finish(now, ev, mask)
+        elif kind == "rate":
+            self._on_rate(now, ev, mask)
 
     def run(self, trace: Trace,
             span_s: Optional[float] = None) -> Dict[str, SimResult]:
@@ -1322,10 +1436,16 @@ class BatchSimulator:
         self.n_events += n_shared
         self.n_reconfigs = np.array(self._reconfigs, dtype=np.int64)
         self.downtime = np.array(self._downtime)
-        F = waf_mod.waf_matrix(self._tasks, self._n_total, self.hw)
+        if self._rate_log:
+            epoch_t, F = _rate_epoch_stack(self._tasks, self._rate_log,
+                                           self._n_total, self.hw)
+        else:
+            epoch_t = None
+            F = waf_mod.waf_matrix(self._tasks, self._n_total, self.hw)
         accs, timelines = _integrate_policies(snap_t, snaps, self._blocks,
                                               self._slows, span, F,
-                                              self._effs, event_t)
+                                              self._effs, event_t,
+                                              epoch_t=epoch_t)
         return {pol: SimResult(pol, float(accs[p]), timelines[p],
                                self._reconfigs[p],
                                self._downtime[p],

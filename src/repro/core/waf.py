@@ -1,12 +1,46 @@
-"""WAF — weighted achieved aggregate FLOP/s (§5.1, Eq. 2) and the
-reconfiguration reward G (Eq. 3/4).
+"""Per-task objectives: pluggable reward models behind the §5 planner.
 
-Scalar entry points (``waf``, ``reward``) are the reference semantics; the
-vector entry points (``waf_curve``, ``reward_curve``) produce whole
-F(t, ·) / G(t, ·) rows at once from the memoized cost-model sweep, which is
+The paper's §5 reward is training WAF — weighted achieved aggregate
+FLOP/s (Eq. 2) and the reconfiguration reward G (Eq. 3/4).  This module
+generalizes that to an ``Objective`` protocol so a :class:`Task` can
+carry any scalar metric the planner should maximize:
+
+* :class:`TrainingWAF` (the default) keeps the paper's semantics
+  bit-identical: ``value`` is ``w(t) * T(t, x)`` from the memoized
+  cost-model sweep, ``state_bytes`` the fp32+Adam ``16 * n_params``
+  transition payload, ``necessary`` the §5.2 feasibility floor.
+* :class:`ServingSLO` scores an inference fleet: goodput — requests/s
+  served *within* a p99 latency SLO — under an offered request rate,
+  with a lane-failure discount calibrated from
+  ``serve.scheduler.ContinuousBatcher`` statistics.
+
+An objective produces two things the planner consumes without knowing
+which objective built them:
+
+* ``value(task, x, hw)`` — the scalar reference metric at ``x`` workers
+  (weight applied; no floor/cap handling — :func:`waf` owns those);
+* ``curve(task, n, hw)`` — the same metric for x = 0..n as one fresh
+  float64 vector, elementwise identical to ``value`` at every x.
+
+**Band contract** (what a conforming reward row must satisfy for the
+banded max-plus kernels to stay bitwise-safe): rows produced by
+:func:`reward_curve` must be *flat past the task's cap* — G(t, x') ==
+G(t, cap) for all x' > cap — which :func:`waf_curve` enforces
+generically by clamping every curve past ``task.max_workers``.  Rows
+need *not* be monotone: the DP's value vectors are made monotone at the
+leaves by the engines themselves, and that (not row shape) is what the
+band proof requires.  Objectives whose metric keeps growing past any
+finite worker count (ServingSLO's attainment tail) are therefore safe
+exactly when the task carries an explicit ``max_workers`` cap or the
+full-width band is used.
+
+Scalar entry points (``waf``, ``reward``) are the reference semantics;
+the vector entry points (``waf_curve``, ``reward_curve``,
+``waf_matrix``) produce whole F(t, ·) / G(t, ·) rows at once, which is
 what the vectorized planner consumes."""
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -16,44 +50,187 @@ from repro.core import costmodel
 from repro.core.costmodel import Hardware, TaskModel
 
 
+class Objective:
+    """Protocol for per-task reward models (see module docstring).
+
+    Implementations must be frozen/hashable (Task is a frozen dataclass
+    used as a cache key) and must keep ``value``/``curve`` elementwise
+    identical — ``curve(task, n, hw)[x] == value(task, x, hw)`` for
+    every x — so the scalar reference solver and the vector engines
+    agree to float precision."""
+
+    def value(self, task: "Task", x: int, hw: Hardware) -> float:
+        """Weighted scalar metric at ``x`` workers (no floor/cap)."""
+        raise NotImplementedError
+
+    def curve(self, task: "Task", n: int, hw: Hardware) -> np.ndarray:
+        """Weighted metric for x = 0..n as one fresh float64 vector.
+
+        Default: stack of scalar ``value`` calls — correct for any
+        objective, but O(n) scalar evaluations; override with a
+        vectorized sweep when one exists."""
+        return np.array([self.value(task, x, hw) for x in range(n + 1)],
+                        dtype=np.float64)
+
+    def state_bytes(self, task: "Task") -> float:
+        """Bytes that must move when the task is reconfigured."""
+        raise NotImplementedError
+
+    def necessary(self, task: "Task", hw: Hardware) -> int:
+        """Default requirement floor when ``task.min_workers`` is None."""
+        raise NotImplementedError
+
+    def vector_capable(self, task: "Task") -> bool:
+        """Whether ``curve`` is safe for this task (planner fast path)."""
+        return True
+
+
+@dataclass(frozen=True)
+class TrainingWAF(Objective):
+    """The paper's §5.1 objective: weighted achieved aggregate FLOP/s.
+
+    Bit-identical to the pre-objective code path: ``value`` is the
+    scalar ``achieved_flops`` lookup, ``curve`` the memoized cost-model
+    sweep (flat past the cap via the sweep's index gather), and
+    ``state_bytes`` the fp32 params + grads + Adam moments payload."""
+
+    def value(self, task: "Task", x: int, hw: Hardware) -> float:
+        return task.weight * costmodel.achieved_flops(task.model, x, hw)
+
+    def curve(self, task: "Task", n: int, hw: Hardware) -> np.ndarray:
+        sweep = costmodel.throughput_curve(task.model, n, hw,
+                                           cap=task.max_workers)
+        return task.weight * sweep.flops[:n + 1]   # fresh array (not a view)
+
+    def state_bytes(self, task: "Task") -> float:
+        return 16.0 * task.model.n_params
+
+    def necessary(self, task: "Task", hw: Hardware) -> int:
+        return costmodel.min_feasible_workers(task.model, hw)
+
+    def vector_capable(self, task: "Task") -> bool:
+        return isinstance(task.model, TaskModel)
+
+
+@dataclass(frozen=True)
+class ServingSLO(Objective):
+    """Serving objective: goodput under a p99 latency SLO.
+
+    Models the task as ``x`` identical replicas each sustaining
+    ``capacity_rps`` requests/s, derated by ``lane_fail_discount`` (the
+    fraction of decode lanes lost to faults, calibrated from
+    ``ContinuousBatcher.slo_stats``).  With offered load ``rate_rps``
+    and utilization rho = rate / capacity, the sojourn tail is the
+    M/M/1 exponential ``P(T > slo) = exp(-(1 - rho) * slo / base)``, so
+
+        goodput(x) = min(rate, capacity) * max(0, 1 - e^((rho-1)·k))
+
+    with ``k = slo_latency_s / base_latency_s``.  Deterministic,
+    monotone non-decreasing in x, and saturating toward ``rate_rps`` —
+    pair with an explicit ``Task.max_workers`` cap to give the banded
+    kernels a flat tail (see module docstring)."""
+    rate_rps: float                     # offered request rate
+    slo_latency_s: float = 0.5          # p99 latency target
+    base_latency_s: float = 0.05        # zero-load service time
+    capacity_rps: float = 8.0           # per-worker saturation throughput
+    lane_fail_discount: float = 0.0     # fraction of lanes lost to faults
+
+    def _goodput(self, x: np.ndarray) -> np.ndarray:
+        cap_rps = self.capacity_rps * (1.0 - self.lane_fail_discount)
+        c = x * cap_rps
+        served = np.minimum(self.rate_rps, c)
+        rho = self.rate_rps / np.where(c > 0.0, c, 1.0)
+        k = self.slo_latency_s / self.base_latency_s
+        with np.errstate(over="ignore"):
+            attain = 1.0 - np.exp((rho - 1.0) * k)
+        return np.where(c > 0.0, served * np.maximum(attain, 0.0), 0.0)
+
+    def value(self, task: "Task", x: int, hw: Hardware) -> float:
+        row = self._goodput(np.array([float(x)], dtype=np.float64))
+        return float(task.weight * row[0])
+
+    def curve(self, task: "Task", n: int, hw: Hardware) -> np.ndarray:
+        return task.weight * self._goodput(
+            np.arange(n + 1, dtype=np.float64))
+
+    def state_bytes(self, task: "Task") -> float:
+        # inference replicas ship fp16 weights only — no grads/optimizer
+        return 2.0 * task.model.n_params
+
+    def necessary(self, task: "Task", hw: Hardware) -> int:
+        return 1                        # any non-empty replica set serves
+
+    def vector_capable(self, task: "Task") -> bool:
+        return True
+
+    def with_rate(self, rate_rps: float) -> "ServingSLO":
+        """New objective at a different offered load — the payload of a
+        :class:`~repro.core.scenarios.RateChangeEvent` trace step."""
+        return dataclasses.replace(self, rate_rps=float(rate_rps))
+
+    def calibrated(self, stats: dict) -> "ServingSLO":
+        """New objective with ``lane_fail_discount`` refreshed from
+        :meth:`ContinuousBatcher.slo_stats` counters (lane-failure
+        evictions over all lane completions)."""
+        failed = float(stats.get("lane_failures", 0))
+        done = float(stats.get("completed", 0))
+        frac = failed / max(failed + done, 1.0)
+        return dataclasses.replace(self, lane_fail_discount=frac)
+
+
+#: Module-level default: all instances compare/hash equal, so Tasks built
+#: before and after this PR are interchangeable cache keys.
+TRAINING_WAF = TrainingWAF()
+
+
 @dataclass(frozen=True)
 class Task:
-    """A cluster training task: model + priority weight + min requirement.
+    """A cluster task: model + priority weight + objective + worker bounds.
 
-    ``max_workers`` is a per-task worker ceiling (data-parallel width
-    limits, quota, license caps): workers past the cap idle, so F(t, ·)
-    is *flat* past it.  The planner exploits the flat tail with banded
-    max-plus convolutions (band cap+1 instead of n)."""
+    ``objective`` selects the reward model (default: the paper's
+    training WAF).  ``max_workers`` is a per-task worker ceiling
+    (data-parallel width limits, quota, license caps): workers past the
+    cap idle, so F(t, ·) is *flat* past it.  The planner exploits the
+    flat tail with banded max-plus convolutions (band cap+1 instead of
+    n).  The cap is part of the Task contract proper — every Task-like
+    object the reward layer sees must expose ``max_workers`` (None for
+    uncapped), ``weight``, ``necessary(hw)`` and ``objective``."""
     model: TaskModel
     weight: float = 1.0                    # w(t), recommended 0.5..2.0
     min_workers: Optional[int] = None      # T_necessary(t); None = auto
     max_workers: Optional[int] = None      # worker cap; None = uncapped
+    objective: Objective = TRAINING_WAF    # reward model
 
     def necessary(self, hw: Hardware) -> int:
         if self.min_workers is not None:
             return self.min_workers
-        return costmodel.min_feasible_workers(self.model, hw)
+        return self.objective.necessary(self, hw)
+
+
+def state_bytes(task: Task) -> float:
+    """Reconfiguration payload for ``task`` (objective-defined)."""
+    return task.objective.state_bytes(task)
 
 
 def waf(task: Task, x: int, hw: Hardware) -> float:
-    """F(t, x) = w(t) * T(t, x) if requirement satisfied else 0 (Eq. 2).
+    """F(t, x) = objective value if requirement satisfied else 0 (Eq. 2).
     Workers past ``task.max_workers`` idle: x is clamped to the cap before
-    both the requirement check and the throughput lookup, so a task whose
+    both the requirement check and the metric lookup, so a task whose
     cap sits below its requirement floor can never run."""
-    cap = getattr(task, "max_workers", None)   # duck-typed test tasks
+    cap = task.max_workers
     if cap is not None:
         x = min(x, cap)
     if x < task.necessary(hw) or x <= 0:
         return 0.0
-    return task.weight * costmodel.achieved_flops(task.model, x, hw)
+    return task.objective.value(task, x, hw)
 
 
 def reward(task: Task, x_old: int, x_new: int, *, d_running: float,
            d_transition: float, worker_faulted: bool,
            hw: Hardware) -> float:
-    """G(t, x') (Eq. 3): post-reconfiguration WAF over the expected run
-    duration, minus the WAF lost during the transition when the task must
-    transition (Eq. 4 indicator)."""
+    """G(t, x') (Eq. 3): post-reconfiguration reward over the expected run
+    duration, minus the reward lost during the transition when the task
+    must transition (Eq. 4 indicator)."""
     g = waf(task, x_new, hw) * d_running
     if x_old != x_new or worker_faulted:
         g -= waf(task, x_old, hw) * d_transition
@@ -61,24 +238,32 @@ def reward(task: Task, x_old: int, x_new: int, *, d_running: float,
 
 
 def waf_curve(task: Task, n: int, hw: Hardware) -> np.ndarray:
-    """F(t, ·) for x = 0..n as one vector (Eq. 2), from the memoized
-    cost-model sweep: weight * T(t, x), zeroed below the requirement floor,
-    flat past ``task.max_workers`` (same values as the scalar ``waf`` at
-    every x)."""
-    curve = costmodel.throughput_curve(task.model, n, hw,
-                                       cap=task.max_workers)
-    F = task.weight * curve.flops[:n + 1]          # fresh array (not a view)
+    """F(t, ·) for x = 0..n as one vector (Eq. 2): the objective's curve,
+    zeroed below the requirement floor and clamped flat past
+    ``task.max_workers`` (same values as the scalar ``waf`` at every x)."""
+    F = task.objective.curve(task, n, hw)
     floor = max(task.necessary(hw), 1)
-    if task.max_workers is not None and task.max_workers < floor:
+    cap = task.max_workers
+    if cap is not None and cap < floor:
         F[:] = 0.0                      # cap below the requirement: never runs
-    else:
-        F[:min(floor, n + 1)] = 0.0
+        return F
+    F[:min(floor, n + 1)] = 0.0
+    if cap is not None and cap < n:
+        F[cap + 1:] = F[cap]            # flat tail (band contract)
     return F
 
 
 def waf_matrix(tasks, n: int, hw: Hardware) -> np.ndarray:
     """F(t_i, ·) for every task as one (m, n+1) matrix (Eq. 2 rows): the
-    vectorized simulator's WAF integrand is a gather out of this."""
+    vectorized simulator's WAF integrand is a gather out of this.
+
+    All-training fleets take the shared ``throughput_matrix`` sweep
+    (bit-identical to the pre-objective path); mixed-objective fleets
+    stack per-task ``waf_curve`` rows."""
+    if not all(type(t.objective) is TrainingWAF for t in tasks):
+        if not tasks:
+            return np.zeros((0, n + 1))
+        return np.stack([waf_curve(t, n, hw) for t in tasks])
     F = costmodel.throughput_matrix([t.model for t in tasks], n, hw)
     for i, t in enumerate(tasks):
         F[i] *= t.weight

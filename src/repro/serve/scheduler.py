@@ -11,7 +11,11 @@ free lanes between ticks; finished requests free their lane immediately
 
 This is the serving-side counterpart of Unicron's elasticity story: the
 scheduler tolerates lane-level failure (a poisoned request is evicted
-and its lane recycled) without touching the other lanes.
+and its lane recycled) without touching the other lanes.  Lane outcomes
+are counted (``slo_stats``) and feed the planner's serving objective:
+``waf.ServingSLO.calibrated`` derates per-worker capacity by the
+observed lane-failure fraction, closing the loop between decode-path
+health and cluster-level worker assignment.
 """
 from __future__ import annotations
 
@@ -57,6 +61,8 @@ class ContinuousBatcher:
         self.finished: List[Request] = []
         self._decode = jax.jit(model.decode_step)
         self.steps = 0
+        self.lane_failures = 0          # evicted (poisoned) requests
+        self.completed = 0              # naturally finished requests
 
     # ---- client API --------------------------------------------------------
 
@@ -117,6 +123,7 @@ class ContinuousBatcher:
                     or lane.pos >= self.capacity - 1:
                 req.done = True
                 self.finished.append(req)
+                self.completed += 1
                 lane.req = None
         self.steps += 1
 
@@ -124,11 +131,26 @@ class ContinuousBatcher:
 
     def evict(self, req_id: int) -> bool:
         """Lane-level recovery: drop a poisoned request, recycle the
-        lane; other lanes are untouched."""
+        lane; other lanes are untouched.  Counts toward
+        ``lane_failures`` in :meth:`slo_stats`."""
         for lane in self.lanes:
             if lane.req is not None and lane.req.req_id == req_id:
                 lane.req.done = True
                 self.finished.append(lane.req)
                 lane.req = None
+                self.lane_failures += 1
                 return True
         return False
+
+    def slo_stats(self) -> dict:
+        """Lane-outcome counters for objective calibration — the dict
+        ``waf.ServingSLO.calibrated`` consumes.  ``lane_failures`` are
+        evictions (poisoned/failed requests), ``completed`` natural
+        finishes; the remaining keys are load diagnostics."""
+        return {
+            "lane_failures": self.lane_failures,
+            "completed": self.completed,
+            "steps": self.steps,
+            "queue_depth": len(self.queue),
+            "in_flight": sum(not ln.free for ln in self.lanes),
+        }

@@ -1,0 +1,286 @@
+"""Objective-protocol + engine-registry tests (the api_redesign PR).
+
+Covers the three API seams the redesign touched:
+
+* the engine registry: one canonical ``engine=`` axis, with the
+  historical spellings (``solver=``, ``incremental=False``) resolving
+  through ``planner.resolve_engine`` to the same place;
+* the ``Task``/``Objective`` contract: ``max_workers`` is a real
+  attribute (no duck-probing), ``TrainingWAF`` is bit-identical to the
+  pre-protocol reward, ``ServingSLO`` obeys the curve/value and band
+  contracts;
+* mixed-objective fleets: all PlanTable engines and both fresh solvers
+  agree on plans, and all three simulator engines agree on accumulated
+  WAF under objective-swapping rate events.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel, planner, scenarios, waf as waf_mod
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.costmodel import A800, TaskModel
+from repro.core.planner import PlanInput, PlannerCache, PlanTable
+from repro.core.simulator import (BatchSimulator, TraceSimulator,
+                                  VectorSimulator)
+from repro.core.waf import TRAINING_WAF, ServingSLO, Task, TrainingWAF
+
+D_RUN, D_TRANS = 7200.0, 120.0
+
+
+def _tm(name, p=1.3e9, layers=24, d=2048):
+    return TaskModel(name=name, n_params=p, n_layers=layers, d_model=d)
+
+
+def _mixed_tasks():
+    train = [Task(model=_tm("t0"), weight=1.0),
+             Task(model=_tm("t1", 2.7e9, 32, 2560), weight=2.0)]
+    serve = [Task(model=_tm("s0"), weight=5e13, max_workers=24,
+                  objective=ServingSLO(rate_rps=100.0)),
+             Task(model=_tm("s1"), weight=8e13, max_workers=32,
+                  objective=ServingSLO(rate_rps=160.0,
+                                       capacity_rps=10.0))]
+    return train + serve
+
+
+# ---------------------------------------------------------------------------
+# engine registry (satellite: one axis, four spellings)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_registry_lists_both_axes():
+    reg = planner.engines()
+    assert set(reg) == {"engine", "backend"}
+    assert set(reg["engine"]) == set(planner.ENGINES) \
+        == {"batched", "segtree", "chain", "reference"}
+    assert "numpy" in reg["backend"] and "pallas" in reg["backend"]
+
+
+def test_resolve_engine_shims():
+    """Historical kwargs resolve onto the canonical axis."""
+    assert planner.resolve_engine() == "batched"
+    assert planner.resolve_engine("chain") == "chain"
+    assert planner.resolve_engine(None, incremental=False) == "reference"
+    assert planner.resolve_engine(
+        None, solver=planner.solve_reference) == "reference"
+    with pytest.raises(ValueError):
+        planner.resolve_engine("segment-tree")
+
+
+def test_old_kwargs_build_same_plans():
+    """``incremental=False`` / ``solver=`` (deprecated spellings) produce
+    the same plans as the canonical ``engine=`` names."""
+    tasks = _mixed_tasks()
+    assignment = [32, 40, 16, 24]
+    kw = dict(d_running=D_RUN, d_transition=D_TRANS, workers_per_fault=8)
+    canonical = PlanTable(tasks, assignment, A800, engine="batched", **kw)
+    legacy_ref = PlanTable(tasks, assignment, A800, incremental=False, **kw)
+    explicit_ref = PlanTable(tasks, assignment, A800, engine="reference",
+                             solver=planner.solve_reference, **kw)
+    for key in ["join:1", "finish:0"] + \
+            [f"fault:{i}" for i in range(len(tasks))]:
+        want = canonical.lookup(key)
+        for table in (legacy_ref, explicit_ref):
+            got = table.lookup(key)
+            assert got.assignment == want.assignment, key
+            assert got.total_reward == pytest.approx(want.total_reward,
+                                                     rel=1e-6), key
+
+
+def test_planner_cache_normalizes_engine():
+    """The cache memo key uses the canonical engine name, so the default
+    spelling and the explicit one share a table."""
+    cache = PlannerCache()
+    tasks = _mixed_tasks()
+    assignment = [32, 40, 16, 24]
+    t1 = cache.table(tasks, assignment, A800, D_RUN, D_TRANS)
+    t2 = cache.table(tasks, assignment, A800, D_RUN, D_TRANS,
+                     engine="batched")
+    assert t1 is t2
+
+
+# ---------------------------------------------------------------------------
+# Task/Objective contract (satellite: duck probe removed)
+# ---------------------------------------------------------------------------
+
+
+def test_max_workers_is_part_of_the_contract():
+    """``waf.waf`` reads ``task.max_workers`` directly: a duck-typed task
+    without the attribute is a contract violation, not a silent
+    uncapped task."""
+    class NoCap:
+        model = _tm("duck")
+        weight = 1.0
+        min_workers = None
+
+        def necessary(self, hw):
+            return 1
+
+    with pytest.raises(AttributeError):
+        waf_mod.waf(NoCap(), 8, A800)
+
+
+def test_training_waf_is_bit_identical_to_legacy_reward():
+    """The default objective reproduces the pre-protocol semantics
+    exactly: weight * achieved FLOP/s, floor/cap owned by ``waf()``."""
+    t = Task(model=_tm("t"), weight=1.7, max_workers=16)
+    assert t.objective == TRAINING_WAF == TrainingWAF()
+    n = 32
+    curve = waf_mod.waf_curve(t, n, A800)
+    for x in range(n + 1):
+        assert curve[x] == waf_mod.waf(t, x, A800)
+    legacy = t.weight * costmodel.achieved_flops(t.model, 12, A800)
+    assert waf_mod.waf(t, 12, A800) == legacy
+    assert (curve[16:] == curve[16]).all()        # cap: flat tail
+    assert waf_mod.state_bytes(t) == 16.0 * t.model.n_params
+
+
+def test_serving_slo_objective_contract():
+    slo = ServingSLO(rate_rps=100.0, capacity_rps=8.0)
+    t = Task(model=_tm("s"), weight=2.0, max_workers=40, objective=slo)
+    n = 64
+    curve = waf_mod.waf_curve(t, n, A800)
+    # curve/value elementwise identity (scalar path == vector path)
+    for x in (0, 1, 7, 13, 40, 64):
+        assert curve[x] == waf_mod.waf(t, x, A800)
+    # monotone, saturating toward rate * weight, flat past the cap
+    assert (np.diff(curve) >= -1e-12).all()
+    assert curve[-1] <= t.weight * slo.rate_rps + 1e-9
+    assert (curve[41:] == curve[40]).all()
+    # overloaded widths (capacity below the offered rate, rho > 1 with
+    # the SLO tail fully missed) serve nothing
+    assert curve[0] == 0.0
+    # fp16 weights only — far lighter to move than a training task
+    assert waf_mod.state_bytes(t) == 2.0 * t.model.n_params
+    assert t.necessary(A800) == 1
+    assert slo.with_rate(250.0) == dataclasses.replace(slo,
+                                                       rate_rps=250.0)
+
+
+def test_min_workers_overrides_objective_necessary():
+    slo = ServingSLO(rate_rps=100.0)
+    t = Task(model=_tm("s"), min_workers=4, max_workers=40, objective=slo)
+    assert t.necessary(A800) == 4
+    assert waf_mod.waf(t, 3, A800) == 0.0
+    # above the floor AND above the overload knee (4 workers would clear
+    # the floor but serve nothing: 32 rps capacity vs 100 rps offered)
+    assert waf_mod.waf(t, 16, A800) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# mixed-objective fleets: planner engine equivalence (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_fleet_plan_engines_agree():
+    tasks = _mixed_tasks()
+    assignment = [32, 40, 16, 24]
+    kw = dict(d_running=D_RUN, d_transition=D_TRANS, workers_per_fault=8)
+    tables = {eng: PlanTable(tasks, assignment, A800, engine=eng, **kw)
+              for eng in ("batched", "segtree", "chain", "reference")}
+    keys = [f"fault:{i}" for i in range(len(tasks))] + \
+        ["join:1", "finish:0", "finish:3"]
+    for key in keys:
+        plans = {eng: t.lookup(key) for eng, t in tables.items()}
+        want = plans["batched"]
+        for eng, got in plans.items():
+            assert got.assignment == want.assignment, (key, eng)
+            assert got.total_reward == pytest.approx(
+                want.total_reward, rel=1e-6), (key, eng)
+
+
+def test_mixed_fleet_solvers_agree():
+    tasks = tuple(_mixed_tasks())
+    inp = PlanInput(tasks, (32, 40, 16, 24), 104, D_RUN, D_TRANS,
+                    (True, False, False, False))
+    a = planner.solve(inp, A800)
+    b = planner.solve_fast(inp, A800)
+    c = planner.solve_reference(inp, A800)
+    assert a.assignment == b.assignment == c.assignment
+    assert a.total_reward == pytest.approx(c.total_reward, rel=1e-6)
+    # the serving tasks never exceed their caps
+    for t, x in zip(tasks, a.assignment):
+        if t.max_workers is not None:
+            assert x <= t.max_workers
+
+
+# ---------------------------------------------------------------------------
+# mixed-objective fleets: simulator engine equivalence + rate events
+# ---------------------------------------------------------------------------
+
+
+def _rate_trace(n_nodes, span, slo):
+    base = scenarios.independent_failures(
+        n_nodes=n_nodes, span_s=span, seed=5, gpus_per_node=8,
+        mtbf_node_s=10 * scenarios.DAY)
+    di = scenarios.diurnal_load(n_nodes=n_nodes, span_s=span, seed=2,
+                                slot=2, base=slo, step_s=6 * 3600.0)
+    spk = scenarios.traffic_spikes(n_nodes=n_nodes, span_s=span, seed=4,
+                                   slot=2, base=slo)
+    return base.merged(di).merged(spk)
+
+
+@pytest.mark.parametrize("policy", ["unicron", "megatron"])
+def test_simulator_engines_agree_on_rate_events(policy):
+    slo = ServingSLO(rate_rps=100.0)
+    tasks = [Task(model=_tm("t0")), Task(model=_tm("t1"), weight=2.0),
+             Task(model=_tm("s0"), weight=5e13, max_workers=32,
+                  objective=slo)]
+    assignment = [40, 48, 24]
+    n_nodes, span = 16, 2 * scenarios.DAY
+    trace = _rate_trace(n_nodes, span, slo)
+    assert any(isinstance(c, scenarios.RateChangeEvent)
+               for c in trace.churn)
+
+    ref = TraceSimulator(tasks, list(assignment), policy,
+                         n_nodes=n_nodes).run(trace)
+    vec = VectorSimulator(tasks, list(assignment), policy,
+                          n_nodes=n_nodes).run(trace)
+    bat = BatchSimulator(tasks, list(assignment), [policy],
+                         n_nodes=n_nodes).run(trace)[policy]
+    for got in (vec, bat):
+        rel = abs(ref.accumulated_waf - got.accumulated_waf) \
+            / max(abs(ref.accumulated_waf), 1.0)
+        assert rel < 1e-6, (policy, rel)
+        assert got.n_reconfigs == ref.n_reconfigs
+
+
+def test_rate_event_updates_coordinator_tasks():
+    """A rate step swaps the slot's objective in the simulator AND in the
+    coordinator's entries, so the next replan sees the new rate; workers
+    do not move on the rate event itself."""
+    slo = ServingSLO(rate_rps=100.0)
+    tasks = [Task(model=_tm("t0")), Task(model=_tm("s0"), weight=5e13,
+                                         max_workers=32, objective=slo)]
+    sim = TraceSimulator(tasks, [40, 24], "unicron", n_nodes=16)
+    new = slo.with_rate(240.0)
+    trace = scenarios.ClusterScenario(
+        "one_step", 16, 8, 3600.0,
+        churn=[scenarios.RateChangeEvent(time=600.0, slot=1,
+                                         objective=new)])
+    before = [st.workers for st in sim.tasks]
+    sim.run(trace)
+    assert [st.workers for st in sim.tasks] == before
+    assert sim.tasks[1].task.objective == new
+    assert sim.coord.entries[1].task.objective == new
+    assert len(sim._rate_log) == 1
+
+
+def test_coordinator_task_updated_survives_recovery():
+    """``task_updated`` journals the swapped task: a recovered
+    coordinator plans against the updated objective."""
+    tasks = [Task(model=_tm("t0")),
+             Task(model=_tm("s0"), weight=5e13, max_workers=32,
+                  objective=ServingSLO(rate_rps=100.0))]
+    coord = UnicronCoordinator(tasks, [40, 24], A800,
+                               n_cluster_workers=128)
+    updated = dataclasses.replace(
+        tasks[1], objective=ServingSLO(rate_rps=240.0))
+    coord.task_updated(1, updated)
+    assert coord.entries[1].task == updated
+    successor = UnicronCoordinator.recover(coord.kv, A800,
+                                           n_cluster_workers=128)
+    assert successor.entries[1].task == updated
+    assert successor.entries[1].state_bytes == \
+        waf_mod.state_bytes(updated)

@@ -142,6 +142,8 @@ def test_solve_equals_reference_on_random_tables():
     rng = np.random.RandomState(42)
 
     class _Row:
+        max_workers = None              # Task contract: uncapped
+
         def __init__(self, row):
             self.row = row
 

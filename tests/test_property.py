@@ -21,7 +21,13 @@ HW = Hardware(name="toy", peak_flops=1e12, hbm_bytes=1e12, hbm_bw=1e12,
 
 
 class _TableTask:
-    """Task with an arbitrary tabulated T(t, x) (monotone not required)."""
+    """Task with an arbitrary tabulated T(t, x) (monotone not required).
+
+    Implements the Task contract proper (``weight`` / ``max_workers`` /
+    ``necessary``) instead of relying on the reward layer duck-probing
+    for optional attributes; ``waf.waf`` reads ``max_workers`` directly."""
+
+    max_workers = None                  # uncapped (Task contract)
 
     def __init__(self, table, weight, floor):
         self.table = table

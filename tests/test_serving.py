@@ -66,6 +66,49 @@ def test_evict_recycles_slot(small_model):
     assert len(req1.out) >= 2
 
 
+def test_lane_failure_stats_feed_slo_calibration(small_model):
+    """Lane failure -> eviction -> lane recycling, with the outcome
+    counters flowing into ``ServingSLO.calibrated`` (the decode-path ->
+    planner feedback loop)."""
+    from repro.core.waf import ServingSLO
+
+    cfg, model, params = small_model
+    cb = ContinuousBatcher(model, params, batch_size=2, capacity=24)
+    assert cb.slo_stats() == {"lane_failures": 0, "completed": 0,
+                              "steps": 0, "queue_depth": 0, "in_flight": 0}
+    for i in range(4):
+        cb.submit(Request(req_id=i, prompt=jnp.arange(4, dtype=jnp.int32),
+                          max_new=3))
+    cb.step()                           # admits reqs 0 and 1
+    stats = cb.slo_stats()
+    assert stats["in_flight"] == 2 and stats["queue_depth"] == 2
+    assert cb.evict(0)                  # poisoned request: lane failure
+    assert not cb.evict(0)              # already gone
+    done = cb.run()
+    assert len(done) == 4               # evicted lane was recycled
+    stats = cb.slo_stats()
+    assert stats["lane_failures"] == 1
+    assert stats["completed"] == 3      # natural finishes only
+    assert stats["in_flight"] == 0 and stats["queue_depth"] == 0
+
+    slo = ServingSLO(rate_rps=100.0)
+    cal = slo.calibrated(stats)
+    assert cal.lane_fail_discount == pytest.approx(1.0 / 4.0)
+    # derated capacity strictly lowers goodput at any finite width
+    assert cal.value(_slo_task(cal), 20, None) \
+        < slo.value(_slo_task(slo), 20, None)
+    # a clean batcher calibrates back to zero discount
+    assert slo.calibrated({"lane_failures": 0, "completed": 10}) == slo
+
+
+def _slo_task(objective):
+    from repro.core.costmodel import TaskModel
+    from repro.core.waf import Task
+    return Task(model=TaskModel(name="serve", n_params=1e9, n_layers=8,
+                                d_model=512),
+                max_workers=32, objective=objective)
+
+
 def test_request_batcher(small_model):
     cfg, model, params = small_model
     rb = RequestBatcher(model, params, batch_size=4, capacity=32)
