@@ -8,7 +8,12 @@ Per-convolution latency at n in {256, 1024, 4096} for the four kernels:
   * banded  — ``_maxplus_vals_fused`` at band = cap (cap = n/8, the
               ``Task.max_workers`` regime);
   * pallas  — ``kernels.maxplus.maxplus_conv`` in interpret mode (f32;
-              the compiled Mosaic path needs a TPU).
+              the compiled Mosaic path needs a TPU).  On a TPU host the
+              compiled kernel is timed too (``pallas_tpu_ms``);
+              elsewhere that cell — like every other metric a row skips
+              — is emitted as an explicit ``null`` (the key is always
+              present), so ``check_regression`` skips it deliberately
+              rather than by key absence.
 
 Plus the stacked axis behind the ``engine="batched"`` PlanTable: one
 ``_maxplus_vals_fused_batched`` call over a (B, n+1) stack vs a Python
@@ -56,6 +61,28 @@ BATCH_FLOOR = 2.0              # stacked >= 2x looped at n = 128, B >= 16
 BATCH_FLOOR_N = 128
 PALLAS_TOL = 1e-6
 
+COLUMNS = ["workers", "cap", "batch", "numpy_ms", "fused_ms", "banded_ms",
+           "pallas_interp_ms", "pallas_tpu_ms", "fused_speedup",
+           "banded_speedup", "banded_vs_fused", "stacked_ms", "looped_ms",
+           "stack_speedup"]
+
+
+def _full_row(**cells) -> dict:
+    """Row with EVERY column present: metrics a grid point skips are
+    explicit nulls in the JSON, never absent keys — ``check_regression``
+    then skips them as deliberate "no measurement" markers."""
+    row = {c: None for c in COLUMNS}
+    row.update(cells)
+    return row
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
 
 def _data(n: int, cap: int):
     """Monotone DP vector + reward row flat past the cap (the band
@@ -96,6 +123,14 @@ def run() -> list:
             lambda: np.asarray(
                 maxplus_conv(prev, g, band=cap, interpret=True)),
             iters=iters)
+        # the compiled Mosaic kernel only exists on a TPU host; off-TPU
+        # the cell stays an explicit null
+        pallas_tpu_s = None
+        if _on_tpu():
+            pallas_tpu_s = timeit(
+                lambda: np.asarray(
+                    maxplus_conv(prev, g, band=cap, interpret=False)),
+                iters=iters)
 
         fused_speedup = numpy_s / fused_s
         banded_speedup = numpy_s / banded_s
@@ -109,16 +144,17 @@ def run() -> list:
                   f"{banded_speedup:.1f}x vs dense numpy "
                   f"(floor {BANDED_FLOOR:.0f}x; vs fused "
                   f"{banded_vs_fused:.1f}x)")
-        rows.append({
-            "workers": n, "cap": cap, "batch": None,   # 2-D (unstacked) row
-            "numpy_ms": numpy_s * 1e3,
-            "fused_ms": fused_s * 1e3,
-            "banded_ms": banded_s * 1e3,
-            "pallas_interp_ms": pallas_s * 1e3,
-            "fused_speedup": fused_speedup,
-            "banded_speedup": banded_speedup,
-            "banded_vs_fused": banded_vs_fused,
-        })
+        rows.append(_full_row(
+            workers=n, cap=cap, batch=None,   # 2-D (unstacked) row
+            numpy_ms=numpy_s * 1e3,
+            fused_ms=fused_s * 1e3,
+            banded_ms=banded_s * 1e3,
+            pallas_interp_ms=pallas_s * 1e3,
+            pallas_tpu_ms=None if pallas_tpu_s is None else pallas_tpu_s * 1e3,
+            fused_speedup=fused_speedup,
+            banded_speedup=banded_speedup,
+            banded_vs_fused=banded_vs_fused,
+        ))
     assert checked_floor, "grid never hit the n >= 1024 banded floor check"
 
     # ---- stacked axis: one batched call vs a loop of 2-D fused calls ------
@@ -158,12 +194,12 @@ def run() -> list:
             print(f"[floor check] stacked speedup at (n={n}, "
                   f"batch={batch}, cap={cap}): {stack_speedup:.1f}x vs "
                   f"looped 2-D fused (floor {BATCH_FLOOR:.0f}x)")
-        rows.append({
-            "workers": n, "cap": cap, "batch": batch,
-            "stacked_ms": stacked_s * 1e3,
-            "looped_ms": looped_s * 1e3,
-            "stack_speedup": stack_speedup,
-        })
+        rows.append(_full_row(
+            workers=n, cap=cap, batch=batch,
+            stacked_ms=stacked_s * 1e3,
+            looped_ms=looped_s * 1e3,
+            stack_speedup=stack_speedup,
+        ))
     assert checked_batch_floor, "grid never hit the stacked floor check"
 
     # grid-batched Pallas kernel: interpret-mode equivalence at the
@@ -185,8 +221,5 @@ def run() -> list:
                      / np.maximum(np.abs(oracle), 1.0))
         assert rel < PALLAS_TOL, (r, rel)
 
-    emit(rows, "maxplus",
-         ["workers", "cap", "batch", "numpy_ms", "fused_ms", "banded_ms",
-          "pallas_interp_ms", "fused_speedup", "banded_speedup",
-          "banded_vs_fused", "stacked_ms", "looped_ms", "stack_speedup"])
+    emit(rows, "maxplus", COLUMNS)
     return rows

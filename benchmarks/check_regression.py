@@ -43,7 +43,11 @@ SPECS = {
             "rebuild_speedup",
             "churn_speedup",
             "table_speedup",
+            "fused_speedup",
         ),
+        # one compiled device dispatch per whole-table rebuild step —
+        # any drift means the fused engine stopped being one-program
+        "equal": ("fused_dispatches",),
         # sub-ms small-n measurements are too noisy for a ratio gate
         "min_workers": 256,
     },

@@ -79,6 +79,7 @@ class PlanStats:
     batched_levels: int = 0            # level-synchronous merge sweeps
     batched_launches: int = 0          # stacked max-plus kernel launches
     lazy_tracebacks: int = 0           # plans materialized by traceback
+    device_dispatches: int = 0         # fused-engine compiled programs run
 
 
 class UnicronCoordinator:
@@ -106,9 +107,13 @@ class UnicronCoordinator:
 
         ``plan_engine``: incremental PlanTable engine — ``"batched"``
         (default: level-synchronous stacked merges, value-only assembly,
-        lazy traceback), ``"segtree"`` (dyadic segment tree, O(log m)
+        lazy traceback), ``"fused"`` (the whole-table value rebuild
+        compiled into ONE jitted ``lax.scan`` dispatch; same-signature
+        churn reuses the cached program, ``device_dispatches`` counts
+        the executions), ``"segtree"`` (dyadic segment tree, O(log m)
         churn invalidation, one kernel call per merge) or ``"chain"``
-        (the PR-2 prefix/suffix chains).
+        (the PR-2 prefix/suffix chains).  ``prebuild_scenarios``
+        composes with any of them.
 
         ``prebuild_scenarios``: run the whole-table value rebuild on
         every plan-table refresh (including the churn triggers, where the
@@ -276,6 +281,9 @@ class UnicronCoordinator:
                                              - seen["launches"])
         self.plan_stats.lazy_tracebacks += (stats["tracebacks"]
                                             - seen["tracebacks"])
+        self.plan_stats.device_dispatches += (
+            stats.get("device_dispatches", 0)
+            - seen.get("device_dispatches", 0))
         self._bstats_seen = dict(stats)
 
     # ---- plan generation -------------------------------------------------

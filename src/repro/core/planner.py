@@ -30,8 +30,8 @@ Engine registry
 ---------------
 ``engines()`` is the single discovery point for the planner's engine and
 backend axes.  ``engine=`` (values from ``engines()["engine"]``:
-``"batched"``/``"segtree"``/``"chain"``/``"reference"``) is the one
-canonical spelling, accepted by ``PlanTable``/``PlannerCache.table``
+``"batched"``/``"fused"``/``"segtree"``/``"chain"``/``"reference"``) is
+the one canonical spelling, accepted by ``PlanTable``/``PlannerCache.table``
 directly and as the value of the simulators'/coordinator's
 ``plan_engine=`` kwarg (named to coexist with ``run_monte_carlo``'s
 *simulator*-axis ``engine=``).  The historical ``solver=`` /
@@ -62,11 +62,15 @@ share the candidate set (``prev[j-k] + g[k]``), so their maxima agree:
   float32; the batched variant puts the stack axis on the Pallas grid.
   Selected with the backend switch: ``set_maxplus_backend("pallas")`` or
   ``REPRO_PLANNER_BACKEND=pallas``; default stays ``numpy`` (float64).
+* ``kernels.maxplus.maxplus_scan_chunk`` — the scan-compatible Pallas
+  chunk step the fused engine runs inside its one-program ``lax.scan``
+  when the pallas backend is selected (pre-gathered static-width
+  operands, so one trace serves every scan step).
 
-Incremental engine matrix
--------------------------
+Incremental engine matrix (chain -> segtree -> batched -> fused)
+----------------------------------------------------------------
 ``PlanTable`` precomputes the one-step lookahead lookup table the paper
-uses for O(1) dispatch at failure time.  Three incremental engines build
+uses for O(1) dispatch at failure time.  Four incremental engines build
 it (mirroring the scalar -> vector -> batched simulator matrix):
 
 * ``engine="chain"`` — the PR-2 prefix/suffix DP chains: P[i]/T[i] value
@@ -103,7 +107,35 @@ it (mirroring the scalar -> vector -> batched simulator matrix):
      total reward but NO assignments; the O(m) argmax traceback runs
      only for the scenario a ``lookup`` actually dispatches.
 
-  All three engines reduce identical candidate sets with exact
+* ``engine="fused"`` — the one-program engine: the ENTIRE whole-table
+  value rebuild (level-synchronous tree merges, top-down complement
+  sweep, per-task fault combines, per-scenario argmaxes and totals) is
+  ONE jitted device dispatch.  A host-side *schedule builder* decomposes
+  every banded convolution of the batched engine's sweep — same
+  operands, operand orders and bands — into fixed-width candidate-offset
+  chunks that scatter-max into a slot buffer, groups the chunk rows by
+  dependency level, and the compiled program runs ``lax.scan`` over the
+  resulting step table with either a pure-``jnp`` float64 inner step
+  (default; bitwise-identical totals to the numpy engines) or the Pallas
+  ``maxplus_scan_chunk`` kernel under ``REPRO_PLANNER_BACKEND=pallas``.
+
+  *Schedule padding contract*: every level's chunk rows are padded to a
+  multiple of the scan group width with -inf dummy rows (band = -1
+  masks the whole chunk, and a -inf row scatter-maxes to a no-op), and
+  per-row ragged bands are masked to -inf inside the step — padding is
+  value-neutral because a masked candidate never beats the always-finite
+  k=0 candidate.  *Retrace keys*: compiled programs are cached per
+  schedule signature (m, n_max, per-task unfaulted/faulted bands,
+  backend) — reward-row *values* are runtime inputs, so churn that
+  preserves caps and budgets re-dispatches the cached program with zero
+  retraces; a capacity or cap change is a new signature (new trace), not
+  an error.  ``batch_stats["device_dispatches"]`` counts exactly 1 per
+  whole-table rebuild.  Lazy single-scenario lookups before a rebuild,
+  and every argmax traceback, stay on the host-side batched machinery
+  unchanged; node vectors are not written to the ``PlannerCache`` array
+  store (the program cache replaces content-keyed reuse on this path).
+
+  All four engines reduce identical candidate sets with exact
   order-free maxima, so their plans are float-identical.
 
 With ``lazy=True`` scenarios (and the node merges feeding them) are
@@ -400,11 +432,14 @@ def get_maxplus_backend() -> str:
 # backend axes (see the module docstring's "Engine registry" section).
 # ---------------------------------------------------------------------------
 
-ENGINES = ("batched", "segtree", "chain", "reference")
+ENGINES = ("batched", "fused", "segtree", "chain", "reference")
 
 _ENGINE_DESCRIPTIONS = {
     "batched": "level-synchronous stacked dyadic tree; value-only "
                "rebuilds + lazy traceback (default)",
+    "fused": "one-program engine: whole-table value rebuild compiled "
+             "into a single jitted lax.scan dispatch (program cache "
+             "keyed on the schedule signature)",
     "segtree": "per-node dyadic segment tree, O(log m) churn "
                "invalidation, one kernel call per merge",
     "chain": "prefix/suffix DP chains; the preserved churn-rebuild "
@@ -577,6 +612,318 @@ def brute_force(inp: PlanInput, hw: Hardware) -> Plan:
     return Plan(tuple(assign), v, _cluster_waf(inp.tasks, assign, hw))
 
 
+# ---------------------------------------------------------------------------
+# Fused one-program engine: schedule builder + compiled program cache.
+#
+# The whole-table value rebuild of the batched engine — level-synchronous
+# tree merges, top-down complement sweep, fault combines, scenario argmaxes
+# — becomes ONE jitted device dispatch.  See the module docstring's
+# ``engine="fused"`` entry for the padding contract and retrace keys.
+# ---------------------------------------------------------------------------
+
+_FUSED_GROUP = 32   # scan step width G: chunk rows per lax.scan step
+_FUSED_ROW_COST = 4  # per-chunk-row overhead (gather/mask/scatter), in
+#                      units of n1 cells — the adaptive-K cost model's
+#                      only tunable
+
+
+def _fused_chunk_width(bands: Sequence[int]) -> int:
+    """Adaptive candidate-offset chunk width K for one schedule: minimize
+    padded candidate slots + per-row overhead over the signature's actual
+    band distribution.  K is static per compiled program (it sets every
+    ``dynamic_slice`` width), so this is trace-time work — e.g. a fleet
+    of cap-16 tasks picks K=17 (band-16 ops become one exact chunk)
+    instead of padding every 17-candidate op to a power of two."""
+    if not bands:
+        return 16
+    best_k, best_cost = 16, None
+    for k in range(8, 65):
+        cost = sum(-(-(b + 1) // k) * (k + _FUSED_ROW_COST)
+                   for b in bands)
+        if best_cost is None or cost < best_cost:
+            best_k, best_cost = k, cost
+    return best_k
+
+
+class _FusedSchedule:
+    """Static whole-table rebuild schedule for one signature
+    (m, n_max, per-task bands).
+
+    Every banded max-plus convolution of the batched sweep is decomposed
+    into ``ceil((band+1)/K)`` chunk rows — chunk ``c`` covering candidate
+    offsets ``[cK, cK+K)`` — which scatter-max into the op's output slot
+    (exact: the candidate set partitions over offset chunks and max is
+    order-free).  Chunk rows are grouped by dependency level (merges
+    bottom-up by tree depth, then the complement sweep top-down, then the
+    fault combines), each level padded to a multiple of the group width
+    ``G`` with inert dummy rows (band = -1), and flattened into
+    ``(steps, G)`` int32 step tables a single ``lax.scan`` consumes.
+
+    All vectors live in one (n_slots, width) slot buffer with ``K``-aware
+    -inf margins on both sides, so a chunk's shifted ``prev`` window and
+    its ``g`` chunk are plain ``dynamic_slice`` gathers at trace-friendly
+    static widths.  Operand orders and bands mirror ``_build_spans`` /
+    ``_ensure_values`` exactly — outputs are bitwise-identical."""
+
+    def __init__(self, m: int, n_max: int,
+                 bands_unf: Tuple[int, ...], bands_f: Tuple[int, ...],
+                 chunk: Optional[int] = None, group: int = _FUSED_GROUP):
+        self.m, self.n_max = m, n_max
+        self.group = group
+        self.n1 = n_max + 1
+
+        levels: List[List[Tuple[int, int]]] = []
+
+        def walk(lo: int, hi: int, d: int) -> None:
+            if len(levels) <= d:
+                levels.append([])
+            levels[d].append((lo, hi))
+            if hi - lo > 1:
+                mid = (lo + hi) // 2
+                walk(lo, mid, d + 1)
+                walk(mid, hi, d + 1)
+
+        walk(0, m, 0)
+        self.levels = levels
+        nodes = [nd for lvl in levels for nd in lvl]
+        self.v_slot = {nd: i for i, nd in enumerate(nodes)}
+        base = len(nodes)
+        self.c_slot = {nd: base + i for i, nd in enumerate(nodes)}
+        base += len(nodes)
+        self.fault_slot = {i: base + i for i in range(m)}
+        base += m
+        self.frow_slot = {i: base + i for i in range(m)}
+        base += m
+        self.scratch = base
+        self.n_slots = base + 1
+
+        sat_memo: Dict[Tuple[int, int], int] = {}
+
+        def sat(lo: int, hi: int) -> int:
+            got = sat_memo.get((lo, hi))
+            if got is None:
+                got = min(sum(bands_unf[lo:hi]), n_max)
+                sat_memo[(lo, hi)] = got
+            return got
+
+        # op_steps: dependency-ordered groups of (prev, g, band, out).
+        op_steps: List[List[Tuple[int, int, int, int]]] = []
+        # V up-sweep: internal merges bottom-up, one step group per tree
+        # depth (children are strictly deeper -> already reduced).
+        for d in reversed(range(len(levels))):
+            ops: List[Tuple[int, int, int, int]] = []
+            for lo, hi in levels[d]:
+                if hi - lo == 1:
+                    continue
+                mid = (lo + hi) // 2
+                sl, sr = sat(lo, mid), sat(mid, hi)
+                if sl < sr:               # band by the flatter operand
+                    prev, g, band = (mid, hi), (lo, mid), sl
+                else:
+                    prev, g, band = (lo, mid), (mid, hi), sr
+                ops.append((self.v_slot[prev], self.v_slot[g],
+                            min(band, n_max), self.v_slot[(lo, hi)]))
+            if ops:
+                op_steps.append(ops)
+        # Complement down-sweep: Comp(child) = Comp(parent) (+) V(sib).
+        csat: Dict[Tuple[int, int], int] = {(0, m): 0}
+        for d in range(len(levels) - 1):
+            ops = []
+            for lo, hi in levels[d]:
+                if hi - lo == 1:
+                    continue
+                mid = (lo + hi) // 2
+                for child, sib in (((lo, mid), (mid, hi)),
+                                   ((mid, hi), (lo, mid))):
+                    satc, sat_v = csat[(lo, hi)], sat(*sib)
+                    csat[child] = min(satc + sat_v, n_max)
+                    if satc < sat_v:      # band by the flatter operand
+                        prev, g, band = (self.v_slot[sib],
+                                         self.c_slot[(lo, hi)], satc)
+                    else:
+                        prev, g, band = (self.c_slot[(lo, hi)],
+                                         self.v_slot[sib], sat_v)
+                    ops.append((prev, g, min(band, n_max),
+                                self.c_slot[child]))
+            if ops:
+                op_steps.append(ops)
+        # Fault combines: Comp(leaf i) (+) faulted row i.
+        ops = [(self.c_slot[(i, i + 1)], self.frow_slot[i],
+                min(bands_f[i], n_max), self.fault_slot[i])
+               for i in range(m)]
+        if ops:
+            op_steps.append(ops)
+
+        # Static per-signature traceback metadata, bulk-copied into the
+        # table's stores after a dispatch (saves the per-rebuild python
+        # sweep the batched engine pays): span saturations, comp-tree
+        # cumulative saturations and sibling paths.
+        self.sat_map = dict(sat_memo)
+        self.csat_map = csat
+        csibs: Dict[Tuple[int, int], Tuple] = {(0, m): ()}
+        for d in range(len(levels) - 1):
+            for lo, hi in levels[d]:
+                if hi - lo == 1:
+                    continue
+                mid = (lo + hi) // 2
+                for child, sib in (((lo, mid), (mid, hi)),
+                                   ((mid, hi), (lo, mid))):
+                    csibs[child] = csibs[(lo, hi)] + (sib,)
+        self.csibs_map = csibs
+
+        all_bands = [op[2] for ops in op_steps for op in ops]
+        self.chunk = chunk = (_fused_chunk_width(all_bands)
+                              if chunk is None else chunk)
+        steps: List[List[Tuple[int, int, int, int, int]]] = []
+        for ops in op_steps:
+            rows = [(prev, g, c, band, out)
+                    for prev, g, band, out in ops
+                    for c in range(0, band + 1, chunk)]
+            steps.append(rows)
+        # left margin sized to the widest chunk offset actually scheduled
+        # (window start padl - off - (K-1) stays > 0, so dynamic_slice
+        # never clamps); right margin keeps g-chunk reads past n_max in
+        # -inf territory.  The scan carries the whole buffer, so every
+        # saved column is saved once per step.
+        max_off = max((r[2] for rows in steps for r in rows), default=0)
+        self.padl = max_off + chunk
+        self.width = self.padl + self.n1 + chunk
+
+        dummy = (self.scratch, self.scratch, 0, -1, self.scratch)
+        packed: List[Tuple[int, int, int, int, int]] = []
+        self.real_rows = 0
+        for rows in steps:
+            self.real_rows += len(rows)
+            rows = rows + [dummy] * (-len(rows) % group)
+            packed.extend(rows)
+        if not packed:
+            packed = [dummy] * group
+        table = np.asarray(packed, dtype=np.int32).reshape(-1, group, 5)
+        self.n_steps = table.shape[0]
+        self.xs = tuple(np.ascontiguousarray(table[:, :, i])
+                        for i in range(5))
+        self.leaf_slots = np.asarray(
+            [self.v_slot[(i, i + 1)] for i in range(m)], dtype=np.int32)
+        self.frow_slots = np.asarray(
+            [self.frow_slot[i] for i in range(m)], dtype=np.int32)
+        self.root_c_slot = self.c_slot[(0, m)]
+        # scenario readout order: fault:0..m-1, finish:0..m-1, join:1
+        self.scen_slots = np.asarray(
+            [self.fault_slot[i] for i in range(m)]
+            + [self.c_slot[(i, i + 1)] for i in range(m)]
+            + [self.v_slot[(0, m)]], dtype=np.int32)
+
+
+class _FusedProgram:
+    """One compiled whole-table rebuild for a schedule signature.
+
+    ``__call__(g_unf, g_f, limits)`` runs the single jitted dispatch:
+    reward-row stacks (m, n+1) float64 and the (2m+1,) per-scenario
+    argmax limits are the only runtime inputs; the step tables are
+    trace-time constants.  Returns host arrays: the (n_slots, n+1) slot
+    values, per-scenario argmax cells, and totals.  Traced and invoked
+    under ``jax.experimental.enable_x64`` so the default backend stays
+    float64 — totals are then bitwise-identical to the numpy engines
+    (each candidate is a single IEEE add; max is order-free).  Under the
+    pallas backend the inner step is ``maxplus_scan_chunk`` (float32
+    kernel arithmetic, float64 buffer), matching the batched engine's
+    pallas precision exactly."""
+
+    def __init__(self, sched: _FusedSchedule, backend: str):
+        import jax                        # deferred: numpy engines never
+        self._jax = jax                   # pay the jax import
+        self.sched = sched
+        self.backend = backend
+        self.calls = 0
+        self._fn = jax.jit(self._program)
+
+    def traces(self) -> int:
+        """Compiled-trace count of the jitted program (the no-retrace
+        assertion probe); -1 if this jax build has no cache probe."""
+        try:
+            return int(self._fn._cache_size())
+        except AttributeError:
+            return -1
+
+    def _program(self, g_unf, g_f, limits):
+        jax = self._jax
+        jnp = jax.numpy
+        sc = self.sched
+        dt = g_unf.dtype
+        K, n1, padl = sc.chunk, sc.n1, sc.padl
+        buf = jnp.full((sc.n_slots, sc.width), NEG, dt)
+        leaves = jax.lax.cummax(g_unf, axis=1)     # running maxima
+        buf = buf.at[sc.leaf_slots, padl:padl + n1].set(leaves)
+        buf = buf.at[sc.frow_slots, padl:padl + n1].set(g_f)
+        buf = buf.at[sc.root_c_slot, padl:padl + n1].set(
+            jnp.zeros((n1,), dt))
+
+        def step(b, xs):
+            src, gsl, off, band, out = xs
+            wins = jax.vmap(
+                lambda r, o: jax.lax.dynamic_slice(
+                    r, (padl - o - (K - 1),), (n1 + K - 1,))
+            )(b[src], off)
+            gs = jax.vmap(
+                lambda r, o: jax.lax.dynamic_slice(r, (padl + o,), (K,))
+            )(b[gsl], off)
+            ks = off[:, None] + jnp.arange(K, dtype=off.dtype)[None, :]
+            gs = jnp.where(ks <= band[:, None], gs, NEG)
+            if self.backend == "pallas":
+                from repro.kernels.maxplus import maxplus_scan_chunk
+                acc = maxplus_scan_chunk(wins, gs).astype(dt)
+            else:
+                acc = jnp.full((wins.shape[0], n1), NEG, dt)
+                for k in range(K):        # static unroll: fused add+max
+                    acc = jnp.maximum(
+                        acc, wins[:, K - 1 - k:K - 1 - k + n1]
+                        + gs[:, k:k + 1])
+            return b.at[out, padl:padl + n1].max(acc), None
+
+        buf, _ = jax.lax.scan(step, buf, sc.xs)
+        vals = buf[:, padl:padl + n1]
+        scen = vals[sc.scen_slots]
+        mask = jnp.arange(n1)[None, :] <= limits[:, None]
+        js = jnp.argmax(jnp.where(mask, scen, NEG), axis=1)
+        totals = jnp.take_along_axis(scen, js[:, None], axis=1)[:, 0]
+        return vals, js, totals
+
+    def __call__(self, g_unf: np.ndarray, g_f: np.ndarray,
+                 limits: np.ndarray):
+        from jax.experimental import enable_x64
+        with enable_x64():                # trace AND dispatch in f64
+            vals, js, totals = self._fn(g_unf, g_f, limits)
+            out = (np.asarray(vals), np.asarray(js), np.asarray(totals))
+        self.calls += 1
+        return out
+
+
+_FUSED_PROGRAMS: OrderedDict = OrderedDict()
+_FUSED_PROGRAM_CAP = 32
+_fused_lock = threading.Lock()
+
+
+def _fused_program(m: int, n_max: int, bands_unf: Tuple[int, ...],
+                   bands_f: Tuple[int, ...], backend: str) -> _FusedProgram:
+    """Process-wide LRU of compiled fused programs, keyed on the schedule
+    signature — same-signature churn rebuilds re-dispatch without
+    retracing (reward values are runtime inputs)."""
+    key = (m, n_max, bands_unf, bands_f, backend)
+    with _fused_lock:
+        prog = _FUSED_PROGRAMS.get(key)
+        if prog is not None:
+            _FUSED_PROGRAMS.move_to_end(key)
+            return prog
+    prog = _FusedProgram(_FusedSchedule(m, n_max, bands_unf, bands_f),
+                         backend)
+    with _fused_lock:
+        got = _FUSED_PROGRAMS.setdefault(key, prog)
+        _FUSED_PROGRAMS.move_to_end(key)
+        while len(_FUSED_PROGRAMS) > _FUSED_PROGRAM_CAP:
+            _FUSED_PROGRAMS.popitem(last=False)
+        return got
+
+
 class PlanTable:
     """Precomputed lookup table (§5.2 'Complexity'): one-step lookahead
     plans for every single-event scenario from the current configuration —
@@ -619,7 +966,11 @@ class PlanTable:
         """``engine`` (canonical axis, values from
         ``engines()["engine"]``): ``"batched"`` (default;
         level-synchronous stacked merges, shared complement sweep,
-        value-only assembly with lazy traceback), ``"segtree"`` (the
+        value-only assembly with lazy traceback), ``"fused"`` (the
+        one-program engine: the whole-table value rebuild is a single
+        jitted ``lax.scan`` dispatch, cached per schedule signature;
+        lazy single lookups and tracebacks share the batched host
+        machinery), ``"segtree"`` (the
         PR-3 per-node dyadic tree, O(log m) invalidation per churn step,
         one kernel call per merge), ``"chain"`` (the PR-2 prefix/suffix
         DP chains, kept as the churn-rebuild baseline) or
@@ -657,18 +1008,20 @@ class PlanTable:
             self._solver = solver or solve
         self._cache = cache
         self.table: Dict[str, Plan] = {}
-        # batched-engine accounting (zeros for the other engines):
+        # batched/fused-engine accounting (zeros for the other engines):
         # tree/complement levels merged, stacked kernel launches issued,
-        # plans materialized by on-demand traceback.
+        # plans materialized by on-demand traceback, and compiled fused
+        # programs executed (exactly 1 per whole-table fused rebuild).
         self.batch_stats: Dict[str, int] = {"levels": 0, "launches": 0,
-                                            "tracebacks": 0}
+                                            "tracebacks": 0,
+                                            "device_dispatches": 0}
         self._incremental = (engine != "reference"
                              and len(self.tasks) > 0
                              and _vector_capable(self.tasks))
         if self._incremental:
             self._init_incremental()
             if not lazy:
-                if engine == "batched":
+                if engine in ("batched", "fused"):
                     self._ensure_values()
                 for key in self.scenario_keys():
                     self.lookup(key)
@@ -1227,8 +1580,14 @@ class PlanTable:
         exactly these O(m) distinct nodes, so nothing is recomputed per
         scenario), then all m fault combines in one more launch, then
         every scenario's total.  NO argmax tracebacks — ``lookup`` runs
-        those lazily for the scenario actually dispatched."""
+        those lazily for the scenario actually dispatched.
+
+        On the fused engine the identical sweep (same operands, orders
+        and bands) runs as ONE compiled device dispatch instead."""
         if self._values_built:
+            return
+        if self.engine == "fused":
+            self._ensure_values_fused()
             return
         self._ensure_tree()
         m = len(self.tasks)
@@ -1298,6 +1657,59 @@ class PlanTable:
                 self._Comp[(ti, ti + 1)], self._n_now))
         self._scen.setdefault("join:1", self._total_entry(
             self._vvec(0, m), self._n_join))
+        self._values_built = True
+
+    def _fused_signature(self) -> Tuple:
+        """Schedule signature of this table: the static inputs the
+        compiled fused program is keyed (and retraced) on.  Bands are
+        normalized to ``n_max`` for uncapped/dense rows."""
+        m = len(self.tasks)
+        bu = tuple(self._n_max if b is None else b
+                   for b in (self._band(i) for i in range(m)))
+        bf = tuple(self._n_max if b is None else b
+                   for b in (self._band(i, faulted=True)
+                             for i in range(m)))
+        return (m, self._n_max, bu, bf, get_maxplus_backend())
+
+    def _ensure_values_fused(self) -> None:
+        """Whole-table value rebuild as ONE compiled device dispatch:
+        fetch (or build) the signature-keyed fused program, hand it the
+        reward-row stacks and per-scenario argmax limits, and unpack the
+        returned slot buffer into the batched engine's stores — the
+        host-side lazy traceback machinery then works unchanged.  Node
+        vectors are deliberately NOT written to the ``PlannerCache``
+        array store: on this path the program cache is the reuse
+        mechanism, and a recurring cluster state is already a whole-table
+        hit at the ``PlannerCache.table`` level."""
+        m = len(self.tasks)
+        prog = _fused_program(*self._fused_signature())
+        g_unf = np.stack([np.asarray(self._row(i), dtype=float)
+                          for i in range(m)])
+        g_f = np.stack([np.asarray(self._row(i, faulted=True),
+                                   dtype=float) for i in range(m)])
+        limits = np.asarray([self._n_fault] * m + [self._n_now] * m
+                            + [self._n_join], dtype=np.int32)
+        vals, js, totals = prog(g_unf, g_f, limits)
+        self.batch_stats["device_dispatches"] += 1
+        sched = prog.sched
+        for node, si in sched.v_slot.items():
+            self._V[node] = vals[si]
+        self._comp_root()
+        for node, si in sched.c_slot.items():
+            self._Comp.setdefault(node, vals[si])
+        self._sat_memo.update(sched.sat_map)
+        self._csat.update(sched.csat_map)
+        self._csibs.update(sched.csibs_map)
+        for ti in range(m):
+            self._scen.setdefault(
+                f"fault:{ti}", (vals[sched.fault_slot[ti]],
+                                int(js[ti]), float(totals[ti])))
+            self._scen.setdefault(
+                f"finish:{ti}", (self._Comp[(ti, ti + 1)],
+                                 int(js[m + ti]), float(totals[m + ti])))
+        self._scen.setdefault("join:1", (self._V[(0, m)], int(js[2 * m]),
+                                         float(totals[2 * m])))
+        self._tree_built = True
         self._values_built = True
 
     def _chain_batched(self, ti: int):
@@ -1448,14 +1860,16 @@ class PlanTable:
         return Plan(tuple(assign), total, self._cwaf(rem, assign))
 
     def rebuild_values(self) -> Dict[str, float]:
-        """Whole-table batched rebuild (batched engine): every scenario's
-        value vector and total reward in a constant number of stacked
-        launches per tree level, with NO assignment tracebacks.  Returns
-        ``{scenario key: total reward}``.  The other engines (and the
-        reference path) fall back to materializing every plan — that per
-        -scenario cost is exactly what the whole-table churn benchmark
-        measures against."""
-        if self.engine == "batched" and self._incremental:
+        """Whole-table value rebuild: every scenario's value vector and
+        total reward with NO assignment tracebacks.  Batched engine: a
+        constant number of stacked launches per tree level; fused
+        engine: ONE compiled device dispatch
+        (``batch_stats["device_dispatches"]``).  Returns ``{scenario
+        key: total reward}``.  The other engines (and the reference
+        path) fall back to materializing every plan — that per-scenario
+        cost is exactly what the whole-table churn benchmark measures
+        against."""
+        if self.engine in ("batched", "fused") and self._incremental:
             self._ensure_values()
             return {k: self._scen[k][2] for k in self.scenario_keys()}
         out: Dict[str, float] = {}
@@ -1467,10 +1881,11 @@ class PlanTable:
 
     def scenario_total(self, key: str) -> Optional[float]:
         """Total reward of one scenario without materializing its
-        assignment.  Batched engine: triggers the whole-table value
-        sweep (totals are a batched product; single dispatches should
-        use ``lookup``).  The other engines assemble the full plan."""
-        if self.engine == "batched" and self._incremental:
+        assignment.  Batched/fused engines: triggers the whole-table
+        value sweep (totals are a whole-table product; single dispatches
+        should use ``lookup``).  The other engines assemble the full
+        plan."""
+        if self.engine in ("batched", "fused") and self._incremental:
             hit = self.table.get(key)
             if hit is not None:
                 return hit.total_reward
@@ -1481,7 +1896,9 @@ class PlanTable:
         return None if plan is None else plan.total_reward
 
     def _assemble(self, key: str) -> Optional[Plan]:
-        if self.engine == "batched":
+        if self.engine in ("batched", "fused"):
+            # the fused engine shares the batched host-side machinery
+            # for lazy single lookups and every argmax traceback
             return self._assemble_batched(key)
         if self.engine == "segtree":
             return self._assemble_segtree(key)

@@ -19,12 +19,22 @@ masking each ``g`` row to -inf past its band (value-neutral: a masked
 candidate can never beat the always-present finite k=0 candidate), so
 every row equals the 2-D kernel on its own slice.
 
+``maxplus_scan_chunk`` is the scan-compatible entry the fused
+one-program planner engine (``engine="fused"``) uses as its inner step:
+every operand arrives pre-gathered at a *static* chunk width, so the
+same ``pallas_call`` shape serves every step of a ``lax.scan`` over the
+planner's padded level schedule (see ``core.planner``'s "fused"
+section).
+
 The kernels run in float32 (planner's numpy path is float64); the
 ``REPRO_PLANNER_BACKEND=pallas`` switch in ``core.planner`` therefore
 trades ~1e-7 relative reward precision for the TPU hot path and is
 opt-in.  ``tests/test_kernels.py`` pins interpret-mode equivalence
 against the numpy oracles (CI runs it under REPRO_PALLAS_INTERPRET=1 on
-every PR, 2-D and batched legs both).
+every PR, 2-D and batched legs both) and records the documented f32
+error budget on paper-scale reward rows
+(``test_maxplus_f32_error_budget_paper_scale``) — the ROADMAP's gate
+before this backend could ever become the default.
 """
 from __future__ import annotations
 
@@ -186,4 +196,82 @@ def maxplus_conv_batched(prev, g, bands=None, *, block: int = 128,
     g_pad = jnp.full((B, max(n1, block)), NEG, dtype=jnp.float32)
     g_pad = g_pad.at[:, :n1].set(g)
     out = _maxplus_batched_call(prev_pad, g_pad, bmax, block, interpret)
+    return out[:, :n1]
+
+
+# ---------------------------------------------------------------------------
+# Scan-compatible chunk kernel: the fused one-program engine's inner step
+# ---------------------------------------------------------------------------
+
+
+def _maxplus_scan_kernel(w_ref, g_ref, o_ref, *, chunk: int, block: int):
+    """o[r, dj] = max_k w[r, j0 + dj + chunk-1 - k] + g[r, k] for the
+    (row, output block) this program owns."""
+    j0 = pl.program_id(1) * block
+
+    def body(k, acc):
+        w = w_ref[0, pl.ds(j0 + chunk - 1 - k, block)]   # w[r, j+K-1-k]
+        gk = g_ref[0, pl.ds(k, 1)]                       # g[r, k]
+        return jnp.maximum(acc, w + gk[0])
+
+    init = jnp.full((block,), NEG, dtype=jnp.float32)
+    o_ref[0, :] = jax.lax.fori_loop(0, chunk, body, init)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block", "interpret"))
+def _maxplus_scan_call(wins, gs, chunk: int, block: int, interpret: bool):
+    B = wins.shape[0]
+    grid_blocks = (wins.shape[1] - (chunk - 1)) // block
+    return pl.pallas_call(
+        functools.partial(_maxplus_scan_kernel, chunk=chunk, block=block),
+        grid=(B, grid_blocks),
+        in_specs=[
+            pl.BlockSpec((1, wins.shape[1]), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, gs.shape[1]), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, grid_blocks * block),
+                                       jnp.float32),
+        interpret=interpret,
+    )(wins, gs)
+
+
+def maxplus_scan_chunk(wins, gs, *, block: int = 128,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked max-plus step over pre-gathered windows — the fused
+    planner engine's ``lax.scan`` inner kernel.
+
+    ``wins`` is a (B, n1 + K - 1) stack of already-shifted ``prev``
+    windows (position ``j + K-1-k`` holds ``prev[j - (off+k)]`` for the
+    row's candidate-offset chunk base ``off``, -inf where out of range)
+    and ``gs`` a (B, K) stack of reward-row chunks (masked to -inf past
+    each row's band).  Returns the (B, n1) float32 stack::
+
+        out[r, j] = max_{0 <= k < K} wins[r, j + K-1-k] + gs[r, k]
+
+    Every shape is a function of (B, n1, K) only — all static per
+    planner schedule signature — so one trace serves every scan step,
+    and the fused engine's whole-table rebuild stays a single compiled
+    dispatch.  Chunk decomposition is exact: a banded convolution's
+    candidate set partitions over offset chunks, and the caller's
+    scatter-max reduction over chunks reproduces the full-band maximum
+    order-free."""
+    wins = jnp.asarray(wins, dtype=jnp.float32)
+    gs = jnp.asarray(gs, dtype=jnp.float32)
+    if wins.ndim != 2 or gs.ndim != 2 or wins.shape[0] != gs.shape[0]:
+        raise ValueError(f"wins/gs must be (B, n1+K-1)/(B, K) stacks, "
+                         f"got {wins.shape} vs {gs.shape}")
+    B, K = gs.shape
+    n1 = wins.shape[1] - (K - 1)
+    if n1 < 1:
+        raise ValueError(f"window width {wins.shape[1]} shorter than "
+                         f"chunk {K}")
+    interpret = resolve_interpret(interpret)
+    nb = max(1, -(-n1 // block))                         # cdiv
+    wins_pad = jnp.full((B, (K - 1) + nb * block), NEG, dtype=jnp.float32)
+    wins_pad = wins_pad.at[:, :wins.shape[1]].set(wins)
+    gs_pad = jnp.full((B, max(K, block)), NEG, dtype=jnp.float32)
+    gs_pad = gs_pad.at[:, :K].set(gs)
+    out = _maxplus_scan_call(wins_pad, gs_pad, K, block, interpret)
     return out[:, :n1]

@@ -301,6 +301,86 @@ def test_maxplus_planner_backend_end_to_end():
         assert rel < 1e-5, (key, rel)
 
 
+@pytest.mark.parametrize("seed", range(6))
+def test_maxplus_scan_chunk_matches_oracle(seed):
+    """The scan-compatible chunk kernel (the fused planner engine's inner
+    step) against its numpy oracle:
+    ``out[r, j] = max_k wins[r, j + K - 1 - k] + gs[r, k]``."""
+    from repro.kernels.maxplus import NEG, maxplus_scan_chunk
+    rng = np.random.RandomState(seed)
+    B = rng.randint(1, 6)
+    K = rng.randint(1, 33)
+    n1 = rng.randint(1, 200)
+    wins = rng.uniform(-50.0, 50.0, (B, n1 + K - 1)).astype(np.float32)
+    gs = rng.uniform(-50.0, 50.0, (B, K)).astype(np.float32)
+    # -inf masking (how the fused program disables off-band candidates
+    # and dummy rows) must stay a no-op candidate, not a NaN source
+    gs[rng.uniform(size=gs.shape) < 0.2] = NEG
+    got = np.asarray(maxplus_scan_chunk(wins, gs))
+    assert got.shape == (B, n1)
+    want = np.full((B, n1), NEG, dtype=np.float32)
+    for k in range(K):
+        want = np.maximum(want, wins[:, K - 1 - k:K - 1 - k + n1]
+                          + gs[:, k:k + 1])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_maxplus_f32_error_budget_paper_scale():
+    """f32 error budget for the Pallas kernels on PAPER-SCALE reward
+    rows — real cost-model reward curves (O(1e2..1e4) values, O(1e-3)
+    increments), chained through an m-task DP exactly as the planner
+    composes them — against the f64 numpy kernel (``_maxplus_vals``).
+
+    Documented budget: **1e-6 relative** on every DP cell, per
+    convolution AND accumulated over the full chain.  Observed error
+    (f32 input rounding, one add per candidate, order-free max) is
+    ~2e-7 chained and ~6e-7 on the raw-row stack, so the budget binds —
+    any extra f32 rounding stage in the kernels would trip it.  This is
+    the gate the ROADMAP requires before the pallas backend can ever
+    become the default."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import A800, TaskModel
+    from repro.core.planner import PlanTable, _maxplus_vals
+    from repro.core.waf import Task
+    from repro.kernels.maxplus import maxplus_conv, maxplus_conv_batched
+    tasks = [Task(model=TaskModel.from_arch(get_arch(size),
+                                            global_batch=256),
+                  weight=w, max_workers=64)
+             for size, w in (("gpt3-1.3b", 1.0), ("gpt3-7b", 1.3),
+                             ("gpt3-13b", 0.7), ("gpt3-1.3b", 2.0))]
+    table = PlanTable(tasks, [32] * len(tasks), A800, 3600.0, 120.0,
+                      lazy=True, n_budget=512)
+    rows = [np.asarray(table._row(i), dtype=np.float64)
+            for i in range(len(tasks))]
+
+    def rel(a, b):
+        return np.max(np.abs(np.asarray(a, dtype=np.float64) - b)
+                      / np.maximum(np.abs(b), 1.0))
+
+    # chained DP: f32 kernel output feeds the next f32 convolution, so
+    # rounding accumulates exactly as it would in a pallas-backed build
+    # (leaf = running max over budgets, like the engines' DP leaves)
+    prev64 = np.maximum.accumulate(rows[0])
+    prev32 = prev64.astype(np.float32)
+    worst = 0.0
+    for g in rows[1:]:
+        prev64 = _maxplus_vals(prev64, g)
+        prev32 = np.asarray(maxplus_conv(prev32, g.astype(np.float32)))
+        worst = max(worst, rel(prev32, prev64))
+    assert worst < 1e-6, f"chained f32 DP error {worst:.2e} over budget"
+
+    # grid-batched kernel on the raw reward stack, same budget
+    stack32 = np.stack(rows).astype(np.float32)
+    prev_stack = np.stack([np.maximum.accumulate(r) for r in rows])
+    got = np.asarray(maxplus_conv_batched(
+        prev_stack.astype(np.float32), stack32))
+    worst_b = max(rel(got[r], _maxplus_vals(prev_stack[r], rows[r]))
+                  for r in range(len(rows)))
+    assert worst_b < 1e-6, f"batched f32 error {worst_b:.2e} over budget"
+    print(f"[f32 budget] chained {worst:.2e}, batched {worst_b:.2e} "
+          f"(budget 1e-6)")
+
+
 # ---------------------------------------------------------------------------
 # end-to-end kernel path
 # ---------------------------------------------------------------------------

@@ -53,7 +53,7 @@ def test_engine_registry_lists_both_axes():
     reg = planner.engines()
     assert set(reg) == {"engine", "backend"}
     assert set(reg["engine"]) == set(planner.ENGINES) \
-        == {"batched", "segtree", "chain", "reference"}
+        == {"batched", "fused", "segtree", "chain", "reference"}
     assert "numpy" in reg["backend"] and "pallas" in reg["backend"]
 
 

@@ -548,6 +548,133 @@ def test_planner_cache_prebuild_runs_value_rebuild():
     assert again.batch_stats["launches"] == launches
 
 
+# ---- (g) fused one-program engine -----------------------------------------
+
+
+@pytest.mark.parametrize("m,n,caps", [
+    (1, 8, [None]), (3, 36, [10, None, 8]), (6, 96, [12] * 6),
+    (7, 96, [16, None, 8, 24, None, 12, 16])])
+def test_fused_engine_bitwise_identical_to_batched(m, n, caps):
+    """The fused one-program engine reduces exactly the batched engine's
+    candidate sets (chunked, scatter-max merged, f64 on device), so eager
+    tables agree bit for bit — totals, assignments AND WAF."""
+    tasks = _tasks(m, caps=caps)
+    assignment = [n // m] * m
+    fus = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="fused")
+    bat = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="batched")
+    assert set(fus.table) == set(bat.table)
+    for key in bat.table:
+        assert fus.table[key].total_reward == bat.table[key].total_reward
+        assert fus.table[key].assignment == bat.table[key].assignment
+        assert fus.table[key].waf == bat.table[key].waf
+
+
+def test_fused_table_matches_reference():
+    """Fused-engine scenario totals against the all-scalar
+    ``solve_reference`` table on a capped fleet (f32 tolerance when the
+    pallas backend is active — the CI leg's configuration)."""
+    from repro.core.planner import get_maxplus_backend
+    tol = 1e-5 if get_maxplus_backend() == "pallas" else 1e-9
+    tasks = _tasks(3, caps=[10, None, 8])
+    assignment = [12, 12, 12]
+    fus = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    engine="fused")
+    ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    assert set(fus.table) == set(ref.table)
+    for key in ref.table:
+        assert fus.table[key].total_reward == pytest.approx(
+            ref.table[key].total_reward, rel=tol), key
+
+
+def test_fused_whole_table_single_dispatch():
+    """A whole-table rebuild on the fused engine is exactly ONE device
+    dispatch — every scenario total materialized, zero tracebacks, zero
+    stacked launches — and repeating it on the warm table dispatches
+    nothing new.  Lookups afterwards stay host-side."""
+    tasks = _tasks(5, caps=[8, None, 12, None, 6])
+    assignment = [12] * 5
+    cache = PlannerCache()
+    lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                       engine="fused")
+    assert lazy.batch_stats["device_dispatches"] == 0
+    totals = lazy.rebuild_values()
+    assert lazy.batch_stats["device_dispatches"] == 1
+    assert lazy.batch_stats["launches"] == 0
+    assert lazy.batch_stats["tracebacks"] == 0
+    assert not lazy.table                    # values only, no Plans yet
+    eager = PlanTable(tasks, assignment, A800, 3600.0, 120.0)
+    assert set(totals) == set(eager.table)
+    for key, total in totals.items():
+        assert total == eager.table[key].total_reward, key
+    lazy.rebuild_values()                    # idempotent on a warm table
+    assert lazy.batch_stats["device_dispatches"] == 1
+    plan = lazy.lookup("fault:2")            # traceback is host-side
+    assert lazy.batch_stats["device_dispatches"] == 1
+    assert lazy.batch_stats["tracebacks"] == 1
+    assert plan.assignment == eager.table["fault:2"].assignment
+    assert plan.total_reward == eager.table["fault:2"].total_reward
+
+
+def test_fused_same_signature_churn_no_retrace():
+    """Cap-constrained churn keeps the schedule signature fixed, so the
+    whole walk runs ONE cached program — a single trace, one execution
+    per distinct state, no program-cache growth past the first build."""
+    import repro.core.planner as planner_mod
+    m = 6
+    tasks = _tasks(m, caps=[12] * m)
+    cache = PlannerCache()
+    states = [[8] * m, [8, 12, 8, 4, 8, 8], [4, 12, 8, 4, 12, 8],
+              [12] * m, [4, 4, 8, 12, 8, 4]]
+    sig = None
+    prog = None
+    dispatches = 0
+    for a in states:
+        table = cache.table(tasks, a, A800, 3600.0, 120.0, n_budget=80,
+                            engine="fused")
+        before = table.batch_stats["device_dispatches"]
+        table.rebuild_values()
+        dispatches += table.batch_stats["device_dispatches"] - before
+        if sig is None:
+            sig = table._fused_signature()
+            prog = planner_mod._FUSED_PROGRAMS[sig]
+        else:
+            # caps bound every draw, so bands — hence the signature, and
+            # with it the compiled program — never change across the walk
+            assert table._fused_signature() == sig
+            assert planner_mod._FUSED_PROGRAMS[sig] is prog
+    assert dispatches == len(states)
+    assert prog.calls >= len(states)
+    # ONE trace for the whole walk (-1 only if this jax cannot report it)
+    assert prog.traces() in (-1, 1)
+
+
+def test_fused_engine_pallas_backend_matches_reference():
+    """engine="fused" under REPRO_PLANNER_BACKEND=pallas (via the
+    setter): the f32 scan-chunk kernel becomes the inner step and the
+    table must match the all-scalar reference to f32 tolerance — the
+    combination CI pins under REPRO_PALLAS_INTERPRET=1."""
+    from repro.core.planner import set_maxplus_backend
+    tasks = _tasks(2, caps=[8, None])
+    ref = PlanTable(tasks, [8, 16], A800, 3600.0, 120.0,
+                    incremental=False, solver=solve_reference)
+    set_maxplus_backend("pallas")
+    try:
+        fus = PlanTable(tasks, [8, 16], A800, 3600.0, 120.0,
+                        engine="fused")
+    finally:
+        set_maxplus_backend(None)
+    assert set(fus.table) == set(ref.table)
+    for key in ref.table:
+        a, b = fus.table[key], ref.table[key]
+        rel = abs(a.total_reward - b.total_reward) / max(
+            1.0, abs(b.total_reward))
+        assert rel < 1e-5, (key, rel)
+    assert fus.batch_stats["device_dispatches"] == 1
+
+
 def test_batched_scenario_total_value_only():
     """``scenario_total`` never materializes assignments and agrees with
     the reference solver's totals; unknown keys return None."""

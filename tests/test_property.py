@@ -200,6 +200,66 @@ def test_batched_plan_table_matches_reference_under_capped_churn(data, m):
         assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
 
 
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(), m=st.integers(min_value=1, max_value=4))
+def test_fused_plan_table_matches_reference_under_capped_churn(data, m):
+    """ISSUE 8 property: random cap-constrained churn driven through
+    ``engine="fused"`` tables (shared PlannerCache; each whole-table
+    value rebuild is ONE compiled device dispatch) must reproduce the
+    scalar reference's reward on every scenario of every intermediate
+    state, with totals BIT-identical to a parallel ``"batched"`` lane
+    (the program reduces exactly the batched candidate sets in f64) and
+    the dispatch counter moving by exactly 1 per cold rebuild, 0 on a
+    warm table."""
+    from repro.configs import get_arch
+    from repro.core.costmodel import A800, TaskModel
+    from repro.core.planner import PlannerCache, PlanTable
+    from repro.core.waf import Task
+
+    sizes = ["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b"]
+    caps = [data.draw(st.sampled_from([4, 8, 12, None])) for _ in range(m)]
+    tasks = [Task(model=TaskModel.from_arch(get_arch(sizes[i % 4]),
+                                            global_batch=128 if i % 2
+                                            else 256),
+                  weight=0.5 + 0.1 * i, max_workers=caps[i])
+             for i in range(m)]
+    cache = PlannerCache()
+    bat_cache = PlannerCache()
+    assignment = [data.draw(st.sampled_from([4, 8, 12])) for _ in range(m)]
+    for _ in range(data.draw(st.integers(min_value=1, max_value=3))):
+        lazy = cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                           workers_per_fault=4, n_budget=52,
+                           engine="fused")
+        bat = bat_cache.table(tasks, assignment, A800, 3600.0, 120.0,
+                              workers_per_fault=4, n_budget=52,
+                              engine="batched")
+        ref = PlanTable(tasks, assignment, A800, 3600.0, 120.0,
+                        workers_per_fault=4, incremental=False,
+                        solver=solve_reference)
+        n_now = sum(assignment)
+        warm = lazy._values_built
+        before = lazy.batch_stats["device_dispatches"]
+        totals = lazy.rebuild_values()
+        # one compiled program execution per COLD whole-table rebuild;
+        # a warm (cache-returned) table re-reads its memoized values
+        assert (lazy.batch_stats["device_dispatches"] - before
+                == (0 if warm else 1))
+        bat_totals = bat.rebuild_values()
+        assert set(totals) == set(bat_totals) == set(ref.table)
+        for key in ref.table:
+            want = ref.table[key].total_reward
+            assert abs(totals[key] - want) <= 1e-9 * max(1.0, abs(want)), key
+            assert totals[key] == bat_totals[key], key    # bit-identical
+            got = lazy.lookup(key)
+            assert got.total_reward == totals[key], key
+            budget = {"join:1": n_now + 4}.get(
+                key, n_now if key.startswith("finish")
+                else max(n_now - 4, 0))
+            assert sum(got.assignment) <= budget, (key, got)
+        i = data.draw(st.integers(min_value=0, max_value=m - 1))
+        assignment[i] = data.draw(st.sampled_from([4, 8, 12, 16]))
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     data=st.data(),
