@@ -104,6 +104,15 @@ SPECS = {
         "equal": ("converged", "waf_delta", "reconverge_s", "n_crashes"),
         "lower": ("churn_overhead_ratio", "dispatch_overhead_ratio"),
     },
+    "controlplane": {
+        # sharded rows carry the ingestion speedup vs the legacy
+        # scan-based loop (also floor-asserted >= 20x in-bench); the
+        # event counts are deterministic — a drift means the drain
+        # consumed a different stream, a semantic regression
+        "keys": ("config", "store", "agents"),
+        "higher": ("ingest_speedup",),
+        "equal": ("events", "loop_events", "sev1_replans"),
+    },
 }
 
 

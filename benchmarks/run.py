@@ -32,9 +32,11 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
            "cluster_sim", "serving_slo", "transition", "throughput",
-           "waf_multitask", "traces", "ablation", "roofline", "chaos"]
+           "waf_multitask", "traces", "ablation", "roofline", "chaos",
+           "controlplane"]
 QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-                 "cluster_sim", "serving_slo", "transition", "chaos"]
+                 "cluster_sim", "serving_slo", "transition", "chaos",
+                 "controlplane"]
 
 
 def main() -> None:

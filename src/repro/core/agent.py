@@ -43,6 +43,31 @@ BACKOFF_BASE_S = 1.0
 BACKOFF_CAP_S = 8.0
 
 
+def heartbeat_cohort(agents, now: float) -> None:
+    """Publish heartbeats for a whole agent cohort in one array write
+    per shared store (``KVStore.heartbeat_batch`` — the fleet-scale
+    ingestion path).  Agents whose client offers no batch entry point
+    (chaos-bound node clients, the legacy store) beat individually, so
+    partition semantics and the legacy path are unchanged.  ``agents``
+    is the usual node-id -> agent mapping; dead agents are skipped
+    (same contract as ``UnicronAgent.heartbeat``)."""
+    singles = []
+    batches: Dict[int, Tuple[object, list]] = {}
+    for agent in agents.values():
+        if not agent.alive:
+            continue
+        batch = getattr(agent.kv, "heartbeat_batch", None)
+        if batch is None:
+            singles.append(agent)
+        else:
+            batches.setdefault(id(agent.kv), (agent.kv, []))[1].append(
+                agent.node_id)
+    for store, node_ids in batches.values():
+        store.heartbeat_batch(node_ids, now, ttl=HEARTBEAT_TTL_S)
+    for agent in singles:
+        agent.heartbeat(now)
+
+
 @dataclass
 class GPUMonitor:
     """Dedicated CPU monitoring thread for one GPU (§3.1)."""

@@ -51,7 +51,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.agent import UnicronAgent
+from repro.core.agent import UnicronAgent, heartbeat_cohort
 from repro.core.cluster import Cluster
 from repro.core.controlloop import ControlLoop
 from repro.core.coordinator import UnicronCoordinator
@@ -281,10 +281,15 @@ class ChaosHarness:
     events: List[object] = field(default_factory=list)
     n_crashes: int = 0
     last_event_t: float = 0.0
+    # chaos-free store override (e.g. kvstore.LegacyKVStore for the
+    # legacy-vs-sharded equivalence suite); chaos runs always use
+    # ChaosKVStore, which wraps the sharded store
+    kv_factory: Optional[object] = None
 
     def __post_init__(self):
         self.kv = (ChaosKVStore(self.schedule) if self.schedule
-                   else KVStore())
+                   else (self.kv_factory() if self.kv_factory
+                         else KVStore()))
         self.coord = UnicronCoordinator(
             list(self.tasks), list(self.assignment), self.hw, kv=self.kv,
             n_cluster_workers=self.n_nodes * self.gpus_per_node,
@@ -402,8 +407,8 @@ class ChaosHarness:
                 self._fire_world(script[wi], t)
                 wi += 1
             self._repair_crew(t)
+            heartbeat_cohort(self.agents, t)
             for a in self.agents.values():
-                a.heartbeat(t)
                 a.flush_outbox(t)
             self._announce_intents(t)
             if self.loop.tick(t):

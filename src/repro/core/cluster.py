@@ -21,6 +21,11 @@ class Cluster:
         # placement: task index per node (None = free pool)
         self.placement: Dict[int, Optional[int]] = {
             i: None for i in range(n_nodes)}
+        # index of drained node ids, maintained by fail/recover so the
+        # control loop's repair sweep and capacity reads are O(#unhealthy)
+        # instead of O(#nodes) per tick at fleet scale
+        self._unhealthy: set = set()
+        self._total_gpus = sum(n.n_gpus for n in self.nodes)
 
     # ---- capacity ----------------------------------------------------------
 
@@ -28,7 +33,8 @@ class Cluster:
         return [n for n in self.nodes if n.healthy]
 
     def healthy_workers(self) -> int:
-        return sum(n.n_gpus for n in self.healthy_nodes())
+        return self._total_gpus - sum(self.nodes[i].n_gpus
+                                      for i in self._unhealthy)
 
     def free_healthy_nodes(self) -> List[Node]:
         return [n for n in self.healthy_nodes()
@@ -41,6 +47,7 @@ class Cluster:
         node = self.nodes[node_id]
         node.healthy = False
         node.repair_done_at = repair_done_at
+        self._unhealthy.add(node_id)
         owner = self.placement[node_id]
         self.placement[node_id] = None
         return owner
@@ -49,6 +56,18 @@ class Cluster:
         node = self.nodes[node_id]
         node.healthy = True
         node.repair_done_at = None
+        self._unhealthy.discard(node_id)
+
+    def repair_due(self, now: float) -> List[Node]:
+        """Drained nodes whose repair has completed, id order — the
+        control loop's rejoin sweep, O(#unhealthy) not O(#nodes)."""
+        out = []
+        for nid in sorted(self._unhealthy):
+            n = self.nodes[nid]
+            if not n.healthy and n.repair_done_at is not None \
+                    and n.repair_done_at <= now:
+                out.append(n)
+        return out
 
     # ---- placement ---------------------------------------------------------
 

@@ -1,8 +1,8 @@
 """The Unicron control loop — operational glue between agents and the
-coordinator (§3, Figure 5).
+coordinator (§3, Figure 5), event-driven at fleet scale.
 
 Agents publish heartbeats and error reports into the status monitor (the
-etcd-like KV store); the control loop is the coordinator-side poller
+etcd-like KV store); the control loop is the coordinator-side consumer
 that turns that stream into decisions:
 
   1. expire heartbeat leases -> LOST_CONNECTION (SEV1) for silent nodes,
@@ -13,18 +13,38 @@ that turns that stream into decisions:
      reconfiguration plan (lookup table first, fresh solve on miss),
   5. on node repair or reappearance: rejoin + replan (or restore).
 
-Delivery semantics (the consumer side of the contract in ``kvstore.py``):
-agents publish at-least-once, so every record may arrive more than once
-and out of order.  The loop is idempotent under that: a record is
-*consumed* by deleting it and writing a processed marker under
-``CONSUMED_PREFIX + key`` (the producer-visible ack); a re-delivered
-record whose marker exists is deleted without re-firing.  All
-consumption state lives in the KV — a restarted loop (after a
-coordinator crash) inherits the markers and never double-fires a
-trigger.  Markers are garbage-collected after ``marker_retention_s``
-(which must exceed the transport's maximum re-delivery lag); records
-themselves are deleted on consume, so KV residency stays bounded over
-arbitrarily long traces.
+Event-driven tick (the consumer side of the sharded-store contract in
+``kvstore.py``): each drain family is consumed from its append-cursor
+event queue — the loop reads ``queue_slice(family, cursor)``, consumes
+the visible records, and advances a *conservative* cursor (the index of
+the first entry that is neither consumed nor deleted, i.e. the oldest
+record still waiting out its detection latency).  The cursor is
+persisted under ``CURSOR_PREFIX + family``, so a recovered loop resumes
+at the dead loop's position instead of rescanning history; because the
+cursor never passes an unresolved record, a crash between consume and
+cursor write only re-reads — the ``/consumed`` markers make the replay
+a no-op.  A tick whose queues are all empty does **zero** prefix scans
+and zero sort allocations (``tick_stats`` counts them); marker GC runs
+every ``gc_interval_s`` instead of scanning ``/consumed/`` per tick
+(sound because the at-least-once contract already requires retention to
+exceed the worst re-delivery lag — GC timing is bounded-residency
+bookkeeping, not correctness).  On a store without queues
+(``LegacyKVStore``) the loop falls back to the original
+scan+sort+delete drains with identical observable semantics — the
+equivalence suite replays one trace through both and asserts byte-equal
+event streams.
+
+Delivery semantics: agents publish at-least-once, so every record (and
+every queue entry) may arrive more than once and out of order.  The
+loop is idempotent under that: a record is *consumed* by deleting it
+and writing a processed marker under ``CONSUMED_PREFIX + key`` (the
+producer-visible ack); a re-delivered record whose marker exists is
+deleted without re-firing.  All consumption state lives in the KV — a
+restarted loop (after a coordinator crash) inherits the markers and
+never double-fires a trigger.  Markers are garbage-collected after
+``marker_retention_s`` (which must exceed the transport's maximum
+re-delivery lag); records themselves are deleted on consume, so KV
+residency stays bounded over arbitrarily long traces.
 
 False-positive drains: a partition can silence a healthy node's
 heartbeats long enough to expire its lease.  Before draining on
@@ -35,7 +55,10 @@ otherwise unchanged — restores that exact assignment instead of
 replanning.  Restoring matters because the planner's reward is
 hysteretic (transition penalties make it sticky): replanning after a
 spurious drain would not return to the pre-drain optimum, so restore is
-what makes chaos runs converge to the chaos-free state exactly.
+what makes chaos runs converge to the chaos-free state exactly.  The
+loop tracks outstanding snapshots in memory (seeded from one
+``/coord/lost/`` scan at construction), so the reappearance sweep is
+free when nothing is drained.
 
 The loop is deliberately synchronous and driven by an external clock so
 the discrete-event simulator and the real examples share it.
@@ -43,16 +66,19 @@ the discrete-event simulator and the real examples share it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.agent import UnicronAgent
 from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
 from repro.core.detection import ErrorKind
 from repro.core.handling import Action, Trigger
-from repro.core.kvstore import CONSUMED_PREFIX, PLAN_EPOCH_KEY
+from repro.core.kvstore import (CONSUMED_PREFIX, CURSOR_PREFIX,
+                                PLAN_EPOCH_KEY, QUEUE_FAMILIES)
 
 LOST_PREFIX = "/coord/lost/"
+
+ERRORS_FAMILY, FINISHED_FAMILY, LAUNCH_FAMILY = QUEUE_FAMILIES
 
 
 @dataclass
@@ -76,14 +102,36 @@ class LoopEvent:
 class ControlLoop:
     def __init__(self, coordinator: UnicronCoordinator, cluster: Cluster,
                  agents: Dict[int, UnicronAgent],
-                 marker_retention_s: float = 600.0):
+                 marker_retention_s: float = 600.0,
+                 gc_interval_s: float = 60.0):
         self.coord = coordinator
         self.cluster = cluster
         self.agents = agents
         self.kv = coordinator.kv
         self.events: List[LoopEvent] = []
         self.marker_retention_s = marker_retention_s
+        self.gc_interval_s = gc_interval_s
+        self._last_gc: Optional[float] = None
         self._case_seq = 0
+        # per-loop tick-cost counters (regression-tested: a quiet tick
+        # must do zero prefix scans and zero drain sorts on a queued
+        # store — the event-driven guarantee)
+        self.tick_stats = {"ticks": 0, "prefix_scans": 0,
+                           "drain_sorts": 0, "queue_reads": 0,
+                           "records_consumed": 0, "gc_runs": 0}
+        # queue-cursor drains when the store offers append queues,
+        # scan+sort fallback otherwise (LegacyKVStore)
+        self._queued = callable(getattr(self.kv, "queue_slice", None))
+        self._cursors: Dict[str, int] = {}
+        if self._queued:
+            for fam in QUEUE_FAMILIES:
+                self._cursors[fam] = int(self.kv.get(CURSOR_PREFIX + fam, 0))
+        # outstanding false-positive-drain snapshots (one scan here;
+        # incrementally maintained so the reappearance sweep is free
+        # when nothing is drained)
+        self._lost_nodes: Set[int] = {
+            int(key[len(LOST_PREFIX):])
+            for key in self.kv.prefix(LOST_PREFIX)}
 
     def _stamped(self, ev: LoopEvent) -> LoopEvent:
         """Stamp plan-producing events with the coordinator's cumulative
@@ -111,13 +159,94 @@ class ControlLoop:
         self.kv.put(CONSUMED_PREFIX + key, now, now=now)
 
     def _gc_markers(self, now: float) -> None:
+        """Purge expired processed markers, amortized to one
+        ``/consumed/`` sweep per ``gc_interval_s``.  Late duplicates are
+        unaffected: the at-least-once contract requires
+        ``marker_retention_s`` to exceed the worst re-delivery lag, so
+        any marker a duplicate could still need is never GC-eligible —
+        the interval only delays reclaiming provably dead markers."""
+        if self._last_gc is not None \
+                and now - self._last_gc < self.gc_interval_s:
+            return
+        self._last_gc = now
+        self.tick_stats["gc_runs"] += 1
+        self.tick_stats["prefix_scans"] += 1
         for key, t in self.kv.prefix(CONSUMED_PREFIX).items():
             if now - float(t) > self.marker_retention_s:
                 self.kv.delete(key)
 
+    # ---- drain-family consumption ------------------------------------------
+
+    def _due_records(self, family: str, now: float) -> List[Tuple[str, Dict]]:
+        """Consume every visible, unconsumed record of one drain family;
+        returns (key, record) pairs in sorted key order (the legacy drain
+        order — lexicographic == chronological for these key schemas).
+
+        Queue path: read appended keys from the persisted cursor,
+        resolve each (duplicate -> delete, not-yet-visible -> leave,
+        visible -> consume), and advance the cursor past the resolved
+        head.  The cursor is conservative — it never passes a record
+        still waiting out its detection latency — so the re-read tail is
+        bounded by the in-flight window, not history."""
+        if not self._queued:
+            self.tick_stats["prefix_scans"] += 1
+            records = self.kv.prefix(family)
+            if not records:
+                return []
+            self.tick_stats["drain_sorts"] += 1
+            out = []
+            for key in sorted(records):
+                if self._consumed(key):
+                    self.kv.delete(key)        # re-delivered duplicate
+                    continue
+                rec = records[key]
+                if rec["visible_at"] > now:
+                    continue
+                self._consume(key, now)
+                out.append((key, rec))
+            self.tick_stats["records_consumed"] += len(out)
+            return out
+
+        cursor = self._cursors[family]
+        if self.kv.queue_len(family) == cursor:
+            return []                          # family idle: zero work
+        self.tick_stats["queue_reads"] += 1
+        out = []
+        resolved_head = 0
+        at_head = True
+        for i, key in enumerate(self.kv.queue_slice(family, cursor)):
+            rec = self.kv.get(key)
+            if rec is None:
+                # consumed earlier (marker holds the ack) or deleted:
+                # either way resolved
+                if at_head:
+                    resolved_head = i + 1
+                continue
+            if self._consumed(key):
+                self.kv.delete(key)            # re-delivered duplicate
+                if at_head:
+                    resolved_head = i + 1
+                continue
+            if rec["visible_at"] > now:
+                at_head = False                # cursor must wait for it
+                continue
+            self._consume(key, now)
+            out.append((key, rec))
+            if at_head:
+                resolved_head = i + 1
+        if resolved_head:
+            self._cursors[family] = cursor + resolved_head
+            self.kv.put(CURSOR_PREFIX + family, cursor + resolved_head)
+        if out:
+            self.tick_stats["drain_sorts"] += 1
+            out.sort(key=lambda kr: kr[0])
+        self.tick_stats["records_consumed"] += len(out)
+        return out
+
     # ---- one tick of the loop ---------------------------------------------
 
     def tick(self, now: float) -> List[LoopEvent]:
+        self.tick_stats["ticks"] += 1
         out: List[LoopEvent] = []
         out += self._expire_heartbeats(now)
         out += self._drain_error_reports(now)
@@ -140,13 +269,7 @@ class ControlLoop:
 
     def _drain_error_reports(self, now: float) -> List[LoopEvent]:
         out = []
-        for key, rec in sorted(self.kv.prefix("/errors/").items()):
-            if self._consumed(key):
-                self.kv.delete(key)            # re-delivered duplicate
-                continue
-            if rec["visible_at"] > now:
-                continue
-            self._consume(key, now)
+        for key, rec in self._due_records(ERRORS_FAMILY, now):
             out.append(self._handle(now, rec["node"],
                                     ErrorKind(rec["kind"])))
         return out
@@ -162,15 +285,12 @@ class ControlLoop:
         set, still-queued reports refer to indices that no longer name
         the same task and are consumed without firing (their workers
         re-report against the new epoch if the task is genuinely done)."""
+        due = self._due_records(FINISHED_FAMILY, now)
+        if not due:
+            return []
         epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
         done = set()
-        for key, rec in sorted(self.kv.prefix("/tasks/finished/").items()):
-            if self._consumed(key):
-                self.kv.delete(key)            # re-delivered duplicate
-                continue
-            if rec["visible_at"] > now:
-                continue
-            self._consume(key, now)
+        for key, rec in due:
             if rec.get("epoch", epoch) != epoch:
                 continue                       # stale: indices have shifted
             done.add(int(rec["task"]))
@@ -187,15 +307,12 @@ class ControlLoop:
         ``task_finished`` — a request computed against a superseded plan
         state is consumed without firing (its submitter re-announces
         against the new epoch if the launch still stands)."""
+        due = self._due_records(LAUNCH_FAMILY, now)
+        if not due:
+            return []
         epoch = self.kv.get(PLAN_EPOCH_KEY, 0)
         pending: Dict[object, Dict] = {}
-        for key, rec in sorted(self.kv.prefix("/tasks/launch/").items()):
-            if self._consumed(key):
-                self.kv.delete(key)            # re-delivered duplicate
-                continue
-            if rec["visible_at"] > now:
-                continue
-            self._consume(key, now)
+        for key, rec in due:
             if rec.get("epoch", epoch) != epoch:
                 continue                       # stale: plan state moved on
             pending.setdefault(rec["task"], rec)
@@ -212,24 +329,23 @@ class ControlLoop:
 
     def _rejoin_repaired(self, now: float) -> List[LoopEvent]:
         out = []
-        for node in self.cluster.nodes:
-            if not node.healthy and node.repair_done_at is not None \
-                    and node.repair_done_at <= now:
-                self.cluster.recover_node(node.node_id)
-                if node.node_id in self.agents:
-                    self.agents[node.node_id].alive = True
-                # a repaired node is a fresh join, not a reappearance:
-                # drop any pending lost-node snapshot so the restore path
-                # cannot fire once its heartbeats resume
-                self.kv.delete(f"{LOST_PREFIX}{node.node_id}")
-                plan = self.coord.reconfigure(
-                    self.cluster.healthy_workers(),
-                    trigger=Trigger.NODE_JOIN)
-                self.cluster.assign(list(plan.assignment))
-                out.append(self._stamped(LoopEvent(
-                    now, node.node_id, ErrorKind.LOST_CONNECTION,
-                    Action.RESUME, plan.assignment,
-                    self.coord.plan_stats.last_dispatch_s)))
+        for node in self.cluster.repair_due(now):
+            self.cluster.recover_node(node.node_id)
+            if node.node_id in self.agents:
+                self.agents[node.node_id].alive = True
+            # a repaired node is a fresh join, not a reappearance:
+            # drop any pending lost-node snapshot so the restore path
+            # cannot fire once its heartbeats resume
+            self.kv.delete(f"{LOST_PREFIX}{node.node_id}")
+            self._lost_nodes.discard(node.node_id)
+            plan = self.coord.reconfigure(
+                self.cluster.healthy_workers(),
+                trigger=Trigger.NODE_JOIN)
+            self.cluster.assign(list(plan.assignment))
+            out.append(self._stamped(LoopEvent(
+                now, node.node_id, ErrorKind.LOST_CONNECTION,
+                Action.RESUME, plan.assignment,
+                self.coord.plan_stats.last_dispatch_s)))
         return out
 
     def _rejoin_reappeared(self, now: float) -> List[LoopEvent]:
@@ -239,16 +355,24 @@ class ControlLoop:
         pre-drain assignment when the plan state is unchanged (same
         epoch, same task count, same healthy capacity after rejoin);
         otherwise fall back to an ordinary join replan."""
+        if not self._lost_nodes:
+            return []
         out = []
-        for key, saved in sorted(self.kv.prefix(LOST_PREFIX).items()):
-            node = int(key[len(LOST_PREFIX):])
+        for node in sorted(self._lost_nodes):
+            key = f"{LOST_PREFIX}{node}"
+            saved = self.kv.get(key)
+            if saved is None:
+                self._lost_nodes.discard(node)
+                continue
             if self.cluster.nodes[node].healthy:
                 self.kv.delete(key)            # repaired through other path
+                self._lost_nodes.discard(node)
                 continue
             hb = self.kv.get(f"/nodes/{node}/alive")
             if hb is None or float(hb) <= saved["drained_at"]:
                 continue                       # still silent
             self.kv.delete(key)
+            self._lost_nodes.discard(node)
             self.cluster.recover_node(node)
             if node in self.agents:
                 self.agents[node].alive = True
@@ -283,6 +407,7 @@ class ControlLoop:
                 "assignment": tuple(e.n_workers for e in self.coord.entries),
                 "epoch": self.coord.plan_epoch,
             }, now=now)
+            self._lost_nodes.add(node)
         owner = self.cluster.placement.get(node)
         self.cluster.fail_node(node, repair_done_at=now + 86400.0)
         p = self.coord.reconfigure(self.cluster.healthy_workers(),

@@ -189,6 +189,126 @@ class OnlineStatMonitor:
         return "ok"
 
 
+class HeartbeatTable:
+    """Array-native heartbeat liveness — the ``FleetMonitor`` ring-buffer
+    idiom extended from per-task statistics to per-shard lease state.
+
+    The status monitor's hot liveness path at fleet scale is not a dict
+    of lease objects: beats and lease deadlines live in numpy arrays
+    sharded by node group (``node_id // group_size``), so
+
+    * a single beat is two array element writes,
+    * a whole agent cohort's beats (``beat_batch``) are one fancy-index
+      scatter per touched group, and
+    * lease expiry (``expired``) is one vectorized ``deadline <= now``
+      comparison + argwhere per group instead of a per-node Python scan.
+
+    Semantics match a plain KV lease table: a beat overwrites the value
+    and re-arms the deadline, ``pop`` revokes, expiry drops the node and
+    reports it exactly once.  Groups materialize lazily, so a sparse id
+    space costs only the groups actually inhabited."""
+
+    __slots__ = ("group_size", "_groups")
+
+    def __init__(self, group_size: int = 1024):
+        self.group_size = group_size
+        # gid -> [beat values, lease deadlines, presence mask]
+        self._groups: Dict[int, Tuple[np.ndarray, np.ndarray,
+                                      np.ndarray]] = {}
+
+    def _group(self, gid: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        g = self._groups.get(gid)
+        if g is None:
+            size = self.group_size
+            g = self._groups[gid] = (np.full(size, np.nan),
+                                     np.full(size, np.inf),
+                                     np.zeros(size, dtype=bool))
+        return g
+
+    def __len__(self) -> int:
+        return sum(int(g[2].sum()) for g in self._groups.values())
+
+    def beat(self, node: int, value: float, deadline: float) -> None:
+        gid, off = divmod(int(node), self.group_size)
+        beats, deadlines, present = self._group(gid)
+        beats[off] = value
+        deadlines[off] = deadline
+        present[off] = True
+
+    def beat_batch(self, nodes, value: float, deadline: float) -> None:
+        """One cohort, one scatter per touched group.  The cohort is
+        sorted once so each group's offsets are a contiguous slice — no
+        per-group masking pass over the whole cohort."""
+        ids = np.asarray(nodes, dtype=np.int64)
+        if ids.size == 0:
+            return
+        if ids.size > 1 and np.any(ids[1:] < ids[:-1]):
+            ids = np.sort(ids)
+        gids = ids // self.group_size
+        offs = ids % self.group_size
+        uniq, starts = np.unique(gids, return_index=True)
+        ends = np.append(starts[1:], ids.size)
+        for gid, lo, hi in zip(uniq, starts, ends):
+            beats, deadlines, present = self._group(int(gid))
+            sel = offs[lo:hi]
+            beats[sel] = value
+            deadlines[sel] = deadline
+            present[sel] = True
+
+    def get(self, node: int, default=None):
+        gid, off = divmod(int(node), self.group_size)
+        g = self._groups.get(gid)
+        if g is None or not g[2][off]:
+            return default
+        return float(g[0][off])
+
+    def pop(self, node: int) -> bool:
+        """Revoke a node's lease; True if it was present."""
+        gid, off = divmod(int(node), self.group_size)
+        g = self._groups.get(gid)
+        if g is None or not g[2][off]:
+            return False
+        g[0][off] = np.nan
+        g[1][off] = np.inf
+        g[2][off] = False
+        return True
+
+    def cas(self, node: int, expect, value) -> bool:
+        """Swap the beat value only — the lease deadline survives, the
+        KV-level cas-preserves-lease contract."""
+        gid, off = divmod(int(node), self.group_size)
+        g = self._groups.get(gid)
+        current = float(g[0][off]) if g is not None and g[2][off] else None
+        if current == expect:
+            self._group(gid)[0][off] = value
+            self._groups[gid][2][off] = True
+            return True
+        return False
+
+    def items(self):
+        """(node, beat value) pairs for all present nodes, id order."""
+        for gid in sorted(self._groups):
+            beats, _, present = self._groups[gid]
+            for off in np.nonzero(present)[0]:
+                yield gid * self.group_size + int(off), float(beats[off])
+
+    def expired(self, now: float) -> list:
+        """Drop lapsed leases; node ids in ascending order — one
+        vectorized comparison + argwhere per inhabited group."""
+        out = []
+        for gid in sorted(self._groups):
+            beats, deadlines, present = self._groups[gid]
+            hits = np.nonzero(present & (deadlines <= now))[0]
+            if hits.size == 0:
+                continue
+            beats[hits] = np.nan
+            deadlines[hits] = np.inf
+            present[hits] = False
+            base = gid * self.group_size
+            out.extend(base + int(off) for off in hits)
+        return out
+
+
 class FleetMonitor:
     """Array-native §4.1 statistical monitor: one (tasks, window) float
     ring buffer replacing per-task ``OnlineStatMonitor`` deques inside the
@@ -204,9 +324,11 @@ class FleetMonitor:
 
     def __init__(self, n_tasks: int, window: int = 64):
         self.window = window
-        self._buf = np.zeros((n_tasks, window))
-        self._pos = np.zeros(n_tasks, dtype=np.int64)
-        self._count = np.zeros(n_tasks, dtype=np.int64)
+        self._n = n_tasks
+        cap = max(1, n_tasks)
+        self._buf = np.zeros((cap, window))
+        self._pos = np.zeros(cap, dtype=np.int64)
+        self._count = np.zeros(cap, dtype=np.int64)
 
     @classmethod
     def primed(cls, avg_iter_s: Sequence[float],
@@ -216,23 +338,39 @@ class FleetMonitor:
         whole fleet)."""
         avg = np.asarray(avg_iter_s, dtype=float)
         mon = cls(avg.size, window=window)
-        mon._buf[:] = avg[:, None]
-        mon._count[:] = window
+        mon._buf[:mon._n] = avg[:, None]
+        mon._count[:mon._n] = window
         return mon
 
     @property
     def n_tasks(self) -> int:
+        return self._n
+
+    @property
+    def capacity(self) -> int:
         return self._buf.shape[0]
 
     def grow(self, avg_iter_s: float) -> int:
-        """Admit one task (churn): returns its row index, primed."""
-        row = np.full((1, self.window), float(avg_iter_s))
-        self._buf = np.concatenate([self._buf, row])
-        self._pos = np.concatenate([self._pos, np.zeros(1, dtype=np.int64)])
-        self._count = np.concatenate([self._count,
-                                      np.full(1, self.window,
-                                              dtype=np.int64)])
-        return self.n_tasks - 1
+        """Admit one task (churn): returns its row index, primed.
+
+        Reallocation is amortized: the ring buffer doubles geometrically
+        when full, so a churn-heavy trace admitting k tasks costs O(k)
+        total row copies instead of O(k^2) per-admit reallocs."""
+        if self._n == self._buf.shape[0]:
+            cap = max(8, 2 * self._buf.shape[0])
+            buf = np.zeros((cap, self.window))
+            pos = np.zeros(cap, dtype=np.int64)
+            count = np.zeros(cap, dtype=np.int64)
+            buf[:self._n] = self._buf
+            pos[:self._n] = self._pos
+            count[:self._n] = self._count
+            self._buf, self._pos, self._count = buf, pos, count
+        row = self._n
+        self._n += 1
+        self._buf[row] = float(avg_iter_s)
+        self._pos[row] = 0
+        self._count[row] = self.window
+        return row
 
     def observe(self, tasks: Sequence[int], iter_s) -> None:
         """Record one completed iteration per task (vectorized scatter)."""

@@ -95,7 +95,14 @@ def test_convergence_suite(baseline):
     assert len(suite["full"].crash_times) > 0
     for name, sched in suite.items():
         h, world = _harness(schedule=sched, seed=7)
+        # chaos parity for the sharded control plane: ChaosKVStore wraps
+        # the sharded store unchanged, liveness is array-native, and the
+        # loop drains from cursor queues — same convergence contract
+        assert isinstance(h.kv, ChaosKVStore)
+        assert isinstance(h.kv, KVStore)
+        assert h.loop._queued
         res = h.run(world, until=max(SPAN, sched.horizon() + 120.0))
+        assert len(h.kv._heartbeats) > 0, name
         assert h.quiesced(), name
         _assert_converged(res, free)
         if name in ("crash", "full"):

@@ -9,17 +9,19 @@ from repro.core.coordinator import UnicronCoordinator
 from repro.core.costmodel import A800, TaskModel
 from repro.core.detection import ErrorKind
 from repro.core.handling import Action
-from repro.core.kvstore import KVStore
+from repro.core.kvstore import KVStore, LegacyKVStore
 from repro.core.waf import Task
 
 
-@pytest.fixture
-def loop():
+# every trigger path runs against both the sharded store (queue-cursor
+# drains) and the legacy flat-dict store (scan+sort fallback)
+@pytest.fixture(params=[KVStore, LegacyKVStore], ids=["sharded", "legacy"])
+def loop(request):
     tasks = [Task(model=TaskModel.from_arch(get_arch("gpt3-1.3b"),
                                             global_batch=64)),
              Task(model=TaskModel.from_arch(get_arch("gpt3-7b"),
                                             global_batch=64))]
-    kv = KVStore()
+    kv = request.param()
     coord = UnicronCoordinator(tasks, [32, 96], A800, kv=kv)
     cluster = Cluster(n_nodes=16, gpus_per_node=8)
     cluster.assign([32, 96])

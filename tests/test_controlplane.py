@@ -1,0 +1,472 @@
+"""Fleet-scale control plane: sharded KV namespace, array-native
+liveness, queue-cursor drains — and the proof that none of it changed
+observable semantics.
+
+The load-bearing property (ISSUE 9): replaying identical scenario
+traces through the legacy flat-dict store (scan+sort drains) and the
+sharded store (queue-cursor drains, HeartbeatTable liveness) produces
+byte-equal ``LoopEvent`` streams and identical plans; the sharded path
+just does O(events) work instead of O(store) per tick (``tick_stats``-
+asserted here, throughput-asserted in ``bench_controlplane``).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.agent import UnicronAgent, heartbeat_cohort
+from repro.core.chaos import ChaosHarness, WorldEvent, demo_world
+from repro.core.cluster import Cluster
+from repro.core.controlloop import ControlLoop
+from repro.core.coordinator import UnicronCoordinator
+from repro.core.costmodel import A800, TaskModel
+from repro.core.detection import ErrorKind, FleetMonitor, HeartbeatTable
+from repro.core.handling import Action
+from repro.core.kvstore import (CONSUMED_PREFIX, CURSOR_PREFIX, KVStore,
+                                LegacyKVStore, QUEUE_FAMILIES)
+from repro.core.waf import Task
+
+
+def _task(size: str, weight: float) -> Task:
+    return Task(model=TaskModel.from_arch(get_arch(size), global_batch=128),
+                weight=weight)
+
+
+def _fleet():
+    tasks = [_task("gpt3-1.3b", 2.0), _task("gpt3-7b", 1.4),
+             _task("gpt3-1.3b", 1.0)]
+    return tasks, [8, 8, 4], _task("gpt3-1.3b", 0.7)
+
+
+def _stack(kv_cls, n_nodes=6, gpus=4):
+    tasks, assignment, _ = _fleet()
+    kv = kv_cls()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=n_nodes * gpus,
+                               workers_per_node=gpus)
+    cluster = Cluster(n_nodes, gpus)
+    cluster.assign(list(assignment))
+    agents = {i: UnicronAgent(i, kv, n_gpus=gpus, seed=100 + i)
+              for i in range(n_nodes)}
+    loop = ControlLoop(coord, cluster, agents)
+    return kv, coord, cluster, agents, loop
+
+
+def _event_sig(events):
+    """The observable decision stream: wall-clock latency fields and
+    cumulative engine counters excluded (they measure the machine, not
+    the decision)."""
+    return [(e.time, e.node, e.kind, e.action, e.plan) for e in events]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: legacy-vs-sharded equivalence on the scenario suite
+# ---------------------------------------------------------------------------
+
+
+def _rich_world(tasks, launch_a, launch_b):
+    """Denser than ``demo_world``: simultaneous kills, simultaneous
+    launches, an in-band SEV1 (ECC) drain, and staggered repairs."""
+    return [
+        WorldEvent(40.0, "error", node=1, error=ErrorKind.CUDA_ERROR),
+        WorldEvent(40.0, "error", node=4, error=ErrorKind.NCCL_TIMEOUT),
+        WorldEvent(220.0, "kill", node=2),
+        WorldEvent(220.0, "kill", node=5),
+        WorldEvent(400.0, "finish", task=tasks[2]),
+        WorldEvent(580.0, "launch", task=launch_a, avg_iter_s=12.0),
+        WorldEvent(580.0, "launch", task=launch_b, avg_iter_s=20.0),
+        WorldEvent(760.0, "repair", node=2),
+        WorldEvent(940.0, "error", node=0, error=ErrorKind.ECC_ERROR),
+        WorldEvent(1120.0, "repair", node=5),
+    ]
+
+
+@pytest.mark.parametrize("world_name", ["demo", "rich"])
+def test_legacy_vs_sharded_equivalence(world_name):
+    """Identical traces through both stores: byte-equal event streams,
+    identical plans, identical final state."""
+    results, streams = {}, {}
+    for kv_cls in (LegacyKVStore, KVStore):
+        tasks, assignment, launch = _fleet()
+        if world_name == "demo":
+            world = demo_world(tasks[2], launch)
+            until = 1100.0
+        else:
+            world = _rich_world(tasks, launch, _task("gpt3-1.3b", 0.5))
+            until = 1400.0
+        h = ChaosHarness(tasks=tasks, assignment=assignment, hw=A800,
+                         kv_factory=kv_cls)
+        results[kv_cls] = h.run(world, until=until)
+        streams[kv_cls] = _event_sig(h.events)
+        if kv_cls is KVStore:
+            # the sharded run was genuinely event-driven: the only
+            # prefix scans were the amortized marker GC sweeps
+            assert h.loop._queued
+            st = h.loop.tick_stats
+            assert st["prefix_scans"] == st["gc_runs"]
+            assert st["queue_reads"] > 0
+        else:
+            assert not h.loop._queued
+    assert streams[LegacyKVStore] == streams[KVStore]
+    assert any(ev[4] is not None for ev in streams[KVStore])
+    legacy, sharded = results[LegacyKVStore], results[KVStore]
+    assert legacy.assignment == sharded.assignment
+    assert legacy.waf == sharded.waf
+    assert legacy.healthy_workers == sharded.healthy_workers
+    assert legacy.n_events == sharded.n_events
+
+
+def test_randomized_stream_equivalence():
+    """Seeded randomized op stream — reports with mixed detection
+    latencies, churn with stale epochs, duplicate re-deliveries —
+    replayed through both stores tick by tick."""
+    stacks = {cls: _stack(cls) for cls in (LegacyKVStore, KVStore)}
+    rng = random.Random(42)
+    extra = [_task("gpt3-1.3b", 0.5), _task("gpt3-1.3b", 0.9)]
+    script = []
+    for step in range(120):
+        t = 10.0 * step
+        roll = rng.random()
+        if roll < 0.35:
+            script.append(("error", rng.randrange(6),
+                           rng.choice([ErrorKind.NCCL_TIMEOUT,
+                                       ErrorKind.CUDA_ERROR,
+                                       ErrorKind.CONNECTION_REFUSED]), t))
+        elif roll < 0.45:
+            script.append(("finish", rng.randrange(6), rng.randrange(3), t))
+        elif roll < 0.55:
+            script.append(("launch", rng.randrange(6),
+                           rng.randrange(len(extra)), t))
+        elif roll < 0.7:
+            script.append(("dup", t))
+        script.append(("tick", t + rng.choice([1.0, 5.0, 9.0])))
+    sigs = {}
+    for cls, (kv, coord, cluster, agents, loop) in stacks.items():
+        consumed_once = {}
+        for op in script:
+            if op[0] == "error":
+                _, node, kind, t = op
+                agents[node].report(kind, t)
+            elif op[0] == "finish":
+                _, node, idx, t = op
+                if idx < len(coord.entries):
+                    agents[node].report_task_finished(idx, t,
+                                                      coord.plan_epoch)
+            elif op[0] == "launch":
+                _, node, which, t = op
+                if all(e.task is not extra[which] for e in coord.entries):
+                    agents[node].request_task_launch(extra[which], t,
+                                                     coord.plan_epoch)
+            elif op[0] == "dup":
+                if consumed_once:
+                    key, rec = next(iter(consumed_once.items()))
+                    kv.put(key, rec, now=op[1])    # late re-delivery
+            else:
+                _, t = op
+                for rec_key, rec in kv.prefix("/errors/").items():
+                    consumed_once.setdefault(rec_key, rec)
+                loop.tick(t)
+        sigs[cls] = _event_sig(loop.events)
+        assert len(loop.events) > 10
+    assert sigs[LegacyKVStore] == sigs[KVStore]
+    assert ([e.n_workers for e in stacks[LegacyKVStore][1].entries]
+            == [e.n_workers for e in stacks[KVStore][1].entries])
+
+
+# ---------------------------------------------------------------------------
+# Queue-cursor drains
+# ---------------------------------------------------------------------------
+
+
+def test_cursor_blocks_on_invisible_record_and_persists():
+    """The cursor never passes a record still waiting out its detection
+    latency, and a restarted loop resumes from the persisted cursor
+    without double-firing."""
+    kv, coord, cluster, agents, loop = _stack(KVStore)
+    agents[1].report(ErrorKind.NCCL_TIMEOUT, 0.0)   # visible at ~90s
+    agents[2].report(ErrorKind.CUDA_ERROR, 0.0)     # visible at 0.3s
+    evs = loop.tick(1.0)
+    assert [e.kind for e in evs] == [ErrorKind.CUDA_ERROR]
+    # the NCCL report heads the queue unresolved: cursor must not move
+    assert kv.get(CURSOR_PREFIX + "/errors/", 0) == 0
+    # loop crashes; the successor inherits cursor + markers from the KV
+    loop2 = ControlLoop(coord, cluster, agents)
+    evs = loop2.tick(95.0)
+    assert [e.kind for e in evs] == [ErrorKind.NCCL_TIMEOUT]
+    assert kv.get(CURSOR_PREFIX + "/errors/") == 2
+    assert loop2.tick(96.0) == []                   # nothing re-fires
+    assert kv.prefix("/errors/") == {}
+
+
+def test_queue_compaction_below_cursor():
+    """Entries below the persisted cursor are compacted away — the queue
+    holds the in-flight window, not history."""
+    kv = KVStore()
+    for i in range(50):
+        kv.put(f"/errors/1/{i}.000", {"visible_at": 0.0}, now=float(i))
+    assert kv.queue_len("/errors/") == 50
+    assert len(kv.queue_slice("/errors/", 48)) == 2
+    assert len(kv._qlog["/errors/"]) == 2           # compacted
+    assert kv.queue_len("/errors/") == 50           # monotonic index
+
+
+def test_quiet_tick_is_free_on_sharded_store():
+    """The event-driven guarantee: a tick with empty queues does zero
+    prefix scans, zero queue reads and zero sort allocations."""
+    kv, coord, cluster, agents, loop = _stack(KVStore)
+    for a in agents.values():
+        a.heartbeat(0.0)
+    loop.tick(1.0)                     # first tick runs the initial GC
+    before = dict(loop.tick_stats)
+    for a in agents.values():
+        a.heartbeat(2.0)
+    assert loop.tick(3.0) == []
+    assert loop.tick(4.0) == []
+    assert loop.tick_stats["prefix_scans"] == before["prefix_scans"]
+    assert loop.tick_stats["queue_reads"] == before["queue_reads"]
+    assert loop.tick_stats["drain_sorts"] == before["drain_sorts"]
+    # one event -> exactly one queue read, and GC stays amortized
+    agents[2].report(ErrorKind.CUDA_ERROR, 4.0)
+    assert len(loop.tick(5.0)) == 1
+    assert loop.tick_stats["queue_reads"] == before["queue_reads"] + 1
+    assert loop.tick_stats["gc_runs"] == 1
+    loop.tick(100.0)                   # interval elapsed -> GC sweeps
+    assert loop.tick_stats["gc_runs"] == 2
+
+
+def test_quiet_tick_skips_sort_on_legacy_store():
+    """Scan-fallback satellite: empty families short-circuit before the
+    per-tick ``sorted()`` allocation."""
+    kv, coord, cluster, agents, loop = _stack(LegacyKVStore)
+    loop.tick(1.0)
+    assert loop.tick_stats["prefix_scans"] > 0      # scans are unavoidable
+    assert loop.tick_stats["drain_sorts"] == 0      # but sorts aren't
+    agents[2].report(ErrorKind.CUDA_ERROR, 1.0)
+    assert len(loop.tick(2.0)) == 1
+    assert loop.tick_stats["drain_sorts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Sharded-store contracts
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_is_namespace_scoped():
+    kv = KVStore()
+    kv.put("/errors/1/10.000", "a")
+    kv.put("/errors/1025/10.000", "b")              # different node group
+    kv.put("/errors/5000/10.000", "c")
+    kv.put("/tasks/finished/10.000/1", "d")
+    kv.put("/coord/journal/tasks", "e")
+    kv.put("/unregistered/x", "f")                  # catch-all shard
+    kv.put("/nodes/7/alive", 3.0, ttl=6.0, now=3.0)
+    assert kv.prefix("/errors/1025/") == {"/errors/1025/10.000": "b"}
+    assert set(kv.prefix("/errors/")) == {"/errors/1/10.000",
+                                          "/errors/1025/10.000",
+                                          "/errors/5000/10.000"}
+    assert kv.prefix("/nodes/") == {"/nodes/7/alive": 3.0}
+    assert kv.prefix("/nodes/7/") == {"/nodes/7/alive": 3.0}
+    assert kv.prefix("/unreg") == {"/unregistered/x": "f"}
+    assert len(kv.prefix("/")) == 7
+    assert len(kv.prefix("")) == 7
+    kv.delete("/errors/1025/10.000")
+    assert kv.get("/errors/1025/10.000") is None
+    assert len(kv.prefix("/errors/")) == 2
+
+
+def test_cas_ttl_interplay_on_sharded_buckets():
+    """The PR 6 lease-wipe regression, re-run against sharded buckets:
+    cas swaps the value only, on heartbeat keys AND ordinary bucketed
+    keys — the lease must survive and fire on schedule."""
+    kv = KVStore()
+    kv.put("/nodes/2049/alive", 10.0, ttl=6.0, now=10.0)   # group 2
+    assert kv.cas("/nodes/2049/alive", 10.0, 11.0)
+    assert kv.get("/nodes/2049/alive") == 11.0
+    assert kv.expire(15.9) == []
+    assert kv.expire(16.0) == ["/nodes/2049/alive"]
+    kv.put("/errors/9000/x", 1, ttl=5.0, now=0.0)          # ledger lease
+    assert kv.cas("/errors/9000/x", 1, 2)
+    assert kv.get("/errors/9000/x") == 2
+    assert kv.expire(4.9) == []
+    assert kv.expire(5.0) == ["/errors/9000/x"]
+    assert kv.get("/errors/9000/x") is None
+    # a ttl-free overwrite clears a previous lease (legacy semantics)
+    kv.put("/errors/9000/y", 1, ttl=5.0, now=0.0)
+    kv.put("/errors/9000/y", 2)
+    assert kv.expire(100.0) == []
+    assert kv.get("/errors/9000/y") == 2
+
+
+def test_watch_fires_across_shards():
+    kv = KVStore()
+    seen = []
+    kv.watch("/errors/", lambda op, k, v: seen.append((op, k)))
+    kv.watch("/nodes/", lambda op, k, v: seen.append((op, k)))
+    kv.put("/errors/1/a", 1)
+    kv.put("/errors/5000/b", 2)                     # different group bucket
+    kv.put("/tasks/finished/1/1", 3)                # not watched
+    kv.heartbeat_batch([3, 2050], 1.0, ttl=6.0)     # watched: per-key notify
+    kv.delete("/errors/1/a")
+    kv.expire(10.0)                                 # both heartbeats lapse
+    assert seen == [("put", "/errors/1/a"), ("put", "/errors/5000/b"),
+                    ("put", "/nodes/3/alive"), ("put", "/nodes/2050/alive"),
+                    ("delete", "/errors/1/a"),
+                    ("expire", "/nodes/2050/alive"),
+                    ("expire", "/nodes/3/alive")]
+
+
+def test_recover_reads_sharded_journal_namespace():
+    """Coordinator journals land in the ``/coord/journal/`` shard and
+    ``UnicronCoordinator.recover`` rebuilds from there."""
+    tasks, assignment, launch = _fleet()
+    kv = KVStore()
+    coord = UnicronCoordinator(list(tasks), list(assignment), A800, kv=kv,
+                               n_cluster_workers=24, workers_per_node=4)
+    coord.task_launched(launch, 20, avg_iter_s=12.0)
+    journal_shard = kv._shards["/coord/journal/"]
+    assert sum(len(b.data) for b in journal_shard.values()) >= 3
+    back = UnicronCoordinator.recover(kv, A800, n_cluster_workers=24,
+                                      workers_per_node=4)
+    assert ([e.n_workers for e in back.entries]
+            == [e.n_workers for e in coord.entries])
+    assert back.plan_epoch == coord.plan_epoch
+
+
+def test_heartbeat_batch_equals_individual_puts():
+    batched, single = KVStore(), KVStore()
+    ids = [0, 5, 1023, 1024, 90000]
+    batched.heartbeat_batch(ids, 7.0, ttl=6.0)
+    for i in ids:
+        single.put(f"/nodes/{i}/alive", 7.0, ttl=6.0, now=7.0)
+    for i in ids:
+        assert batched.get(f"/nodes/{i}/alive") == 7.0
+    assert batched.prefix("/nodes/") == single.prefix("/nodes/")
+    assert batched.expire(13.0) == single.expire(13.0)
+    assert batched.prefix("/nodes/") == {}
+
+
+def test_heartbeat_cohort_batches_per_store():
+    kv = KVStore()
+    agents = {i: UnicronAgent(i, kv, n_gpus=4) for i in range(8)}
+    agents[3].kill()
+    heartbeat_cohort(agents, 5.0)
+    assert kv.get("/nodes/3/alive") is None         # dead: no beat
+    assert all(kv.get(f"/nodes/{i}/alive") == 5.0
+               for i in range(8) if i != 3)
+    # legacy stores take the per-agent path transparently
+    lkv = LegacyKVStore()
+    lagents = {i: UnicronAgent(i, lkv, n_gpus=4) for i in range(4)}
+    heartbeat_cohort(lagents, 5.0)
+    assert all(lkv.get(f"/nodes/{i}/alive") == 5.0 for i in range(4))
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatTable (array-native liveness)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_table_across_groups():
+    hb = HeartbeatTable(group_size=4)
+    hb.beat(1, 10.0, deadline=16.0)
+    hb.beat_batch([2, 3, 4, 9], 11.0, deadline=17.0)   # spans groups 0-2
+    assert len(hb) == 5
+    assert hb.get(1) == 10.0 and hb.get(9) == 11.0
+    assert hb.get(5) is None
+    assert dict(hb.items()) == {1: 10.0, 2: 11.0, 3: 11.0,
+                                4: 11.0, 9: 11.0}
+    # vectorized expiry: ascending ids, exactly once
+    assert hb.expired(16.0) == [1]
+    assert hb.expired(16.0) == []
+    assert hb.expired(17.0) == [2, 3, 4, 9]
+    assert len(hb) == 0
+
+
+def test_heartbeat_table_pop_and_cas():
+    hb = HeartbeatTable(group_size=4)
+    hb.beat(6, 1.0, deadline=9.0)
+    assert hb.cas(6, 1.0, 2.0)                      # value swap
+    assert not hb.cas(6, 1.0, 3.0)                  # stale expect
+    assert hb.get(6) == 2.0
+    assert hb.expired(8.9) == []                    # deadline survived cas
+    assert hb.pop(6) and not hb.pop(6)
+    assert hb.get(6) is None
+    assert hb.cas(7, None, 5.0)                     # expected-absent insert
+    assert hb.get(7) == 5.0
+    assert hb.expired(1e12) == []                   # insert carries no lease
+
+
+# ---------------------------------------------------------------------------
+# Satellite: FleetMonitor geometric growth
+# ---------------------------------------------------------------------------
+
+
+def test_fleetmonitor_grow_geometric_doubling():
+    """Growth is amortized (capacity doubles) and observable behavior —
+    observe / averages / statuses — is unchanged vs a monitor primed
+    with the full task set up front."""
+    grown = FleetMonitor.primed([10.0, 20.0], window=8)
+    avgs = [10.0, 20.0]
+    caps = {grown.capacity}
+    for i in range(30):
+        avg = 5.0 + i
+        assert grown.grow(avg) == 2 + i
+        avgs.append(avg)
+        caps.add(grown.capacity)
+    eager = FleetMonitor.primed(avgs, window=8)
+    assert grown.n_tasks == eager.n_tasks == 32
+    # a handful of geometric realloc points, not one per grow
+    assert len(caps) <= 6
+    assert grown.capacity >= grown.n_tasks
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        tasks = rng.choice(32, size=8, replace=False)
+        vals = rng.uniform(1.0, 40.0, size=8)
+        grown.observe(tasks, vals)
+        eager.observe(tasks, vals)
+    np.testing.assert_array_equal(grown.averages(), eager.averages())
+    np.testing.assert_array_equal(grown.statuses(range(32), 30.0),
+                                  eager.statuses(range(32), 30.0))
+
+
+# ---------------------------------------------------------------------------
+# Chaos parity for the sharded liveness path (detail asserts; the full
+# suite parity lives in test_chaos.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_harness_uses_heartbeat_table():
+    tasks, assignment, launch = _fleet()
+    h = ChaosHarness(tasks=tasks, assignment=assignment, hw=A800)
+    assert isinstance(h.kv, KVStore)
+    h.run(demo_world(tasks[2], launch), until=200.0)
+    assert len(h.kv._heartbeats) > 0                # liveness is array-native
+    assert h.loop._queued
+
+
+def test_marker_gc_still_bounds_residency_with_interval():
+    """Amortized GC keeps residency O(retention + interval), and every
+    report still fires exactly once."""
+    kv, coord, cluster, agents, loop = _stack(KVStore)
+    for i in range(200):
+        t = 50.0 * i
+        agents[i % 6].report(ErrorKind.NCCL_TIMEOUT, t)
+        loop.tick(t + 40.0)
+    loop.tick(10200.0)
+    assert kv.prefix("/errors/") == {}
+    n_markers = len(kv.prefix(CONSUMED_PREFIX))
+    assert n_markers <= (600.0 + loop.gc_interval_s) / 50.0 + 2
+    assert len(loop.events) == 200
+    assert loop.tick_stats["gc_runs"] < loop.tick_stats["ticks"]
+
+
+def test_all_families_have_queues():
+    kv = KVStore()
+    assert QUEUE_FAMILIES == ("/errors/", "/tasks/finished/",
+                              "/tasks/launch/")
+    for fam in QUEUE_FAMILIES:
+        assert kv.queue_len(fam) == 0
+    kv.put("/tasks/launch/00000000000010.000/1/1", {"visible_at": 10.0})
+    kv.put("/tasks/finished/10.000/1", {"visible_at": 10.0})
+    assert kv.queue_len("/tasks/launch/") == 1
+    assert kv.queue_len("/tasks/finished/") == 1
