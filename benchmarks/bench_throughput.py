@@ -37,8 +37,8 @@ def _run_loop(managed: bool, arch: str, tmp: str) -> float:
     data = SyntheticLM(cfg, seq_len=SEQ, global_batch=BATCH)
     step = jax.jit(make_train_step(model, opt, N_MICRO))
     agent = UnicronAgent(0, KVStore()) if managed else None
-    mgr = CheckpointManager(tmp, n_ranks=1, persist_every=4) if managed \
-        else None
+    mgr = CheckpointManager(tmp, n_ranks=1, persist_every=4,
+                            task=f"bench-{arch}") if managed else None
     # warmup/compile
     state, _ = step(state, stack_microbatches(data.batch(0), N_MICRO))
     jax.block_until_ready(state.params)

@@ -1,5 +1,7 @@
 """Figure 9 — transition time after a SEV1 failure, GPT-3 7B, varying
-cluster size, Unicron vs the four baselines.
+cluster size, Unicron vs the four paper baselines plus the ISSUE-10
+recovery-frontier policies (fftrainer hot-spare failover, hierarchical
+tiered restore, redundancy-based continuation).
 
 Rows come out of the array-native ``transition.estimate_batch`` matrix —
 one (policy x component) call per cluster size — so the bench exercises
@@ -15,18 +17,19 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_arch
-from repro.core import transition
+from repro.core import detection, transition
 from repro.core.detection import ErrorKind, detection_time, detection_times
 
 STATE_BYTES = 16.0 * get_arch("gpt3-7b").param_count()
 AVG_ITER_S = 30.0
 CLUSTERS = [16, 32, 64, 128]
-POLICIES = ["unicron", "oobleck", "bamboo", "megatron", "varuna"]
+POLICIES = ["unicron", "oobleck", "bamboo", "megatron", "varuna",
+            "fftrainer", "hierarchical_ckpt", "redundant"]
 
 
 def run() -> list:
     rows = []
-    uni_mask = np.array([p == "unicron" for p in POLICIES])
+    uni_mask = np.array([p in detection.INBAND_POLICIES for p in POLICIES])
     det = detection_times([ErrorKind.LOST_CONNECTION], AVG_ITER_S,
                           uni_mask)[0]
     assert det[0] == detection_time(ErrorKind.LOST_CONNECTION, AVG_ITER_S)
@@ -47,9 +50,17 @@ def run() -> list:
         ckpt = transition.estimate_baseline(
             STATE_BYTES, float(det[1]), dynamic_reconfig=False,
             ckpt_restart=True)
+        fft = transition.estimate_fftrainer(
+            STATE_BYTES, AVG_ITER_S, detect_s=float(det[0]))
+        hier = transition.estimate_hierarchical(
+            STATE_BYTES, AVG_ITER_S, detect_s=float(det[0]))
+        red = transition.estimate_redundant()
         assert by["unicron"] == uni.total
         assert by["oobleck"] == by["bamboo"] == dyn.total
         assert by["megatron"] == by["varuna"] == ckpt.total
+        assert by["fftrainer"] == fft.total
+        assert by["hierarchical_ckpt"] == hier.total
+        assert by["redundant"] == red.total == 0.0
         comp = dict(zip(transition.COMPONENTS, costs[0]))
         rows.append({
             "gpus": n,
@@ -58,12 +69,16 @@ def run() -> list:
             "bamboo_s": by["bamboo"],
             "megatron_s": by["megatron"],
             "varuna_s": by["varuna"],
+            "fftrainer_s": by["fftrainer"],
+            "hierarchical_s": by["hierarchical_ckpt"],
+            "redundant_s": by["redundant"],
             "unicron_detect_s": comp["detect"],
             "unicron_migrate_s": comp["migrate"],
             "unicron_recompute_s": comp["recompute"],
         })
     emit(rows, "transition",
          ["gpus", "unicron_s", "oobleck_s", "bamboo_s", "megatron_s",
-          "varuna_s", "unicron_detect_s", "unicron_migrate_s",
+          "varuna_s", "fftrainer_s", "hierarchical_s", "redundant_s",
+          "unicron_detect_s", "unicron_migrate_s",
           "unicron_recompute_s"])
     return rows

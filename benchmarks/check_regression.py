@@ -93,7 +93,17 @@ SPECS = {
     },
     "transition": {
         "keys": ("gpus",),
-        "equal": ("unicron_s", "megatron_s", "oobleck_s", "bamboo_s"),
+        "equal": ("unicron_s", "megatron_s", "oobleck_s", "bamboo_s",
+                  "fftrainer_s", "hierarchical_s", "redundant_s"),
+    },
+    "frontier": {
+        # per-(config, policy) points on the (downtime, WAF) plane plus
+        # the frontier/dominance booleans — all deterministic (seeded
+        # calibrated traces, batched engine, analytic cost model); a
+        # drift in any of them means the recovery model moved
+        "keys": ("config", "policy"),
+        "equal": ("waf_mean", "downtime_s", "events", "on_frontier",
+                  "beyond_paper"),
     },
     "chaos": {
         # per-class reconvergence rows are fully deterministic (seeded

@@ -31,12 +31,12 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-           "cluster_sim", "serving_slo", "transition", "throughput",
-           "waf_multitask", "traces", "ablation", "roofline", "chaos",
-           "controlplane"]
+           "cluster_sim", "serving_slo", "transition", "frontier",
+           "throughput", "waf_multitask", "traces", "ablation",
+           "roofline", "chaos", "controlplane"]
 QUICK_BENCHES = ["detection", "costmodel", "maxplus", "planner_scale",
-                 "cluster_sim", "serving_slo", "transition", "chaos",
-                 "controlplane"]
+                 "cluster_sim", "serving_slo", "transition", "frontier",
+                 "chaos", "controlplane"]
 
 
 def main() -> None:

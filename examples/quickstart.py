@@ -43,7 +43,8 @@ def main():
 
     # 4) checkpoint through the hierarchical manager
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, n_ranks=1, persist_every=1)
+        mgr = CheckpointManager(d, n_ranks=1, persist_every=1,
+                                task=f"quickstart-{cfg.name}")
         mgr.save(rank=0, step=args.steps, state=state)
         restored, at, src = mgr.restore(0, state)
         print(f"[3] checkpoint restored from tier '{src}' at step {at}")

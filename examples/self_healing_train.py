@@ -66,7 +66,8 @@ def main():
     kv = KVStore()
     agent = UnicronAgent(0, kv)
     tmp = tempfile.mkdtemp(prefix="unicron_demo_")
-    mgr = CheckpointManager(tmp, n_ranks=DP, persist_every=50)
+    mgr = CheckpointManager(tmp, n_ranks=DP, persist_every=50,
+                            task=f"self-heal-{cfg.name}")
 
     # fault-free shadow state to verify strict semantics at the end
     shadow = state

@@ -20,11 +20,15 @@ from repro.checkpoint import inmemory, persistent
 
 class CheckpointManager:
     def __init__(self, directory: str, n_ranks: int,
-                 persist_every: int = 10):
+                 persist_every: int = 10, *, task: str):
+        """``task`` is the task id keying the in-memory store: a manager
+        serves exactly one training task, and the id must match what the
+        coordinator/planner uses so ring snapshots survive handoffs
+        between managers of the same task."""
         self.directory = directory
         self.store = inmemory.InMemoryStore(n_ranks)
         self.persist_every = persist_every
-        self.task = "task"
+        self.task = task
 
     # ---- save path -------------------------------------------------------
 

@@ -37,12 +37,44 @@ def save(directory: str, step: int, tree: Any) -> str:
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
-    marker = os.path.join(directory, "latest")
-    if not os.path.exists(marker):
+def _scan_steps(directory: str) -> Optional[int]:
+    """Newest complete archive on disk, ignoring in-flight ``.tmp.npz``
+    leftovers from a writer that died mid-``save``."""
+    best = None
+    try:
+        names = os.listdir(directory)
+    except OSError:
         return None
-    with open(marker) as f:
-        return int(f.read().strip())
+    for name in names:
+        if not name.startswith("ckpt_") or not name.endswith(".npz"):
+            continue
+        if name.endswith(".tmp.npz"):
+            continue
+        stem = name[len("ckpt_"):-len(".npz")]
+        if not stem.isdigit():
+            continue
+        step = int(stem)
+        if best is None or step > best:
+            best = step
+    return best
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Crash-safe: the ``latest`` marker is written non-atomically after
+    the archive, so a crash can leave it torn, empty, or pointing at a
+    step whose archive never landed.  Any of those falls back to
+    scanning for the newest complete archive."""
+    marker = os.path.join(directory, "latest")
+    step = None
+    try:
+        with open(marker) as f:
+            step = int(f.read().strip())
+    except (OSError, ValueError):
+        step = None
+    if step is not None and os.path.exists(
+            os.path.join(directory, f"ckpt_{step:08d}.npz")):
+        return step
+    return _scan_steps(directory)
 
 
 def restore(directory: str, like: Any, step: Optional[int] = None) -> Any:

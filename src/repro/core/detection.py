@@ -84,6 +84,14 @@ DEGRADE_MARGIN = 1.1            # Fig. 6 blue line
 BASELINE_HEARTBEAT_S = 5.7      # w/o Unicron: scheduler notices node loss
 BASELINE_TIMEOUT_S = 30 * 60.0  # Megatron/NCCL default watchdog
 
+# recovery policies that run an in-band detection stack (Table-2 Unicron
+# column): unicron itself plus the modern-recovery peers, all of which
+# ship agent-side monitors; the paper's four baselines rely on scheduler
+# heartbeats / collective timeouts
+INBAND_POLICIES = frozenset({
+    "unicron", "fftrainer", "hierarchical_ckpt", "redundant",
+})
+
 
 def detection_time(kind: ErrorKind, avg_iter_s: float,
                    unicron: bool = True) -> float:

@@ -34,6 +34,21 @@ through the real detection -> severity -> planner -> transition path in
 ``mixed_fleet``
     All of the above superimposed — the §7.5-style multi-task sweep at
     (n=1024, m=32) that ``benchmarks/bench_cluster_sim.py`` reproduces.
+``calibrated_failures`` / ``calibrated_slow_nodes`` /
+``calibrated_bursts`` / ``calibrated_preemption`` / ``calibrated_fleet``
+    The trace-calibrated family: rates and category mixes come from the
+    committed :mod:`repro.core.calibration` tables instead of free
+    parameters.  Per-category event rates (NVLink / ECC / NIC-class
+    hardware, software crashes, transient network, hangs), SEV1 repair
+    ranges, slow-node and correlated-burst rates, and the 1/n
+    MTTF-vs-fleet-size scaling are pinned to the Acme datacenter
+    characterization (arXiv 2403.07648) and Meta's reliability study
+    (arXiv 2410.21680) — see ``calibration.py`` for the provenance of
+    every number.  ``tests/test_calibration.py`` statistically asserts
+    the generated streams match the tables (Poisson counts, category
+    shares, exponential inter-arrival KS, MTTF scaling), and
+    ``benchmarks/bench_frontier.py`` drives the recovery-policy
+    cost/WAF frontier over ``calibrated_fleet`` traces.
 ``chaos_schedule`` / ``chaos_suite``
     Control-plane fault schedules (``core.chaos.ChaosSchedule``): message
     drop / delayed visibility / duplication, per-node partition windows,
@@ -55,6 +70,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.calibration import DEFAULT_CALIBRATION, FleetCalibration
 from repro.core.chaos import ChaosSchedule
 from repro.core.detection import ErrorKind
 from repro.core.traces import (DAY, NON_SEV1_KINDS, SEV1_KINDS, FailureEvent,
@@ -401,6 +417,151 @@ def scenario_suite(*, n_nodes: int, span_s: float, seed: int,
             gpus_per_node=gpus_per_node, m_initial=m_initial,
             candidates=candidates),
     }
+
+
+# ---- trace-calibrated family (core.calibration tables) --------------------
+
+
+def calibrated_failures(*, n_nodes: int, span_s: float, seed: int,
+                        gpus_per_node: int = 8,
+                        calib: FleetCalibration = DEFAULT_CALIBRATION
+                        ) -> ClusterScenario:
+    """Per-category Poisson faults at the committed calibrated rates.
+
+    The fleet event rate is ``calib.failure_rate_s(n_nodes)`` (per-node
+    MTBF superposed, so fleet MTTF scales as 1/n), each event's category
+    is drawn by the committed shares, its kind uniformly within the
+    category, and SEV1 categories carry a repair time from their
+    calibrated range (non-SEV1 events release the node immediately)."""
+    rng = np.random.default_rng(seed)
+    times = poisson_times(rng, calib.failure_rate_s(n_nodes), span_s)
+    n = times.size
+    nodes = rng.integers(0, n_nodes, size=n)
+    cats = calib.categories
+    shares = np.array([c.share for c in cats])
+    cat_idx = rng.choice(len(cats), size=n, p=shares / shares.sum())
+    events: List[FailureEvent] = []
+    for i in range(n):
+        cat = cats[int(cat_idx[i])]
+        kind = cat.kinds[int(rng.integers(0, len(cat.kinds)))]
+        rep = None
+        if cat.repair_range_s is not None:
+            rep = float(rng.uniform(*cat.repair_range_s))
+        events.append(FailureEvent(time=float(times[i]),
+                                   node=int(nodes[i]), kind=kind,
+                                   repair_s=rep))
+    return ClusterScenario("calibrated_failures", n_nodes, gpus_per_node,
+                           span_s, failures=events, seed=seed)
+
+
+def calibrated_slow_nodes(*, n_nodes: int, span_s: float, seed: int,
+                          gpus_per_node: int = 8,
+                          calib: FleetCalibration = DEFAULT_CALIBRATION
+                          ) -> ClusterScenario:
+    """Slow-node degradations at the calibrated per-node straggler rate;
+    slowdowns sit between the 1.1x margin and the 3x threshold."""
+    rng = np.random.default_rng(seed)
+    times = poisson_times(rng, n_nodes * calib.slow_rate_per_node_s,
+                          span_s)
+    n = times.size
+    nodes = rng.integers(0, n_nodes, size=n)
+    slows = rng.uniform(*calib.slow_slowdown_range, size=n)
+    durs = rng.uniform(*calib.slow_duration_range_s, size=n)
+    events = [DegradationEvent(time=float(t), node=int(nd),
+                               slowdown=float(s), duration_s=float(d))
+              for t, nd, s, d in zip(times, nodes, slows, durs)]
+    return ClusterScenario("calibrated_slow", n_nodes, gpus_per_node,
+                           span_s, degradations=events, seed=seed)
+
+
+def calibrated_bursts(*, n_nodes: int, span_s: float, seed: int,
+                      gpus_per_node: int = 8,
+                      calib: FleetCalibration = DEFAULT_CALIBRATION
+                      ) -> ClusterScenario:
+    """Correlated switch/PSU-domain bursts at the calibrated rate: a
+    whole node group loses ``burst_hit_fraction`` of its members within
+    two minutes and returns together.  Adjacent nodes failing together
+    is precisely the replica-loss case the tier-aware cost model charges
+    (the GEMINI ring neighbor is gone too)."""
+    rng = np.random.default_rng(seed)
+    groups = NodeGroups.contiguous(n_nodes, calib.burst_group_size)
+    onsets = poisson_times(rng, n_nodes * calib.burst_rate_per_node_s,
+                           span_s)
+    events: List[FailureEvent] = []
+    for onset in onsets:
+        gi = int(rng.integers(0, len(groups.groups)))
+        outage = float(rng.uniform(*calib.burst_repair_range_s))
+        members = np.array(groups.groups[gi])
+        hit = members[rng.random(members.size) < calib.burst_hit_fraction]
+        offsets = rng.uniform(0, 120.0, size=hit.size)
+        for node, off in zip(hit, offsets):
+            t = float(onset + off)
+            events.append(FailureEvent(
+                time=t, node=int(node), kind=ErrorKind.LOST_CONNECTION,
+                repair_s=max(float(onset) + outage - t, 60.0)))
+    events.sort(key=lambda e: e.time)
+    return ClusterScenario("calibrated_bursts", n_nodes, gpus_per_node,
+                           span_s, failures=events, groups=groups,
+                           seed=seed)
+
+
+def calibrated_preemption(*, n_nodes: int, span_s: float, seed: int,
+                          gpus_per_node: int = 8,
+                          calib: FleetCalibration = DEFAULT_CALIBRATION
+                          ) -> ClusterScenario:
+    """Scheduler preemption waves at the calibrated fleet-level rate:
+    each wave reclaims a calibrated fraction of the fleet at once."""
+    rng = np.random.default_rng(seed)
+    onsets = poisson_times(rng, calib.preempt_wave_rate_s, span_s)
+    events: List[FailureEvent] = []
+    for onset in onsets:
+        frac = float(rng.uniform(*calib.preempt_fraction_range))
+        k = max(1, int(round(frac * n_nodes)))
+        nodes = rng.choice(n_nodes, size=k, replace=False)
+        reprov = rng.uniform(*calib.preempt_outage_range_s, size=k)
+        offsets = rng.uniform(0, 30.0, size=k)     # reclaim skew
+        for node, off, rep in zip(nodes, offsets, reprov):
+            events.append(FailureEvent(
+                time=float(onset + off), node=int(node),
+                kind=ErrorKind.LOST_CONNECTION, repair_s=float(rep)))
+    events.sort(key=lambda e: e.time)
+    return ClusterScenario("calibrated_preemption", n_nodes,
+                           gpus_per_node, span_s, failures=events,
+                           seed=seed)
+
+
+def calibrated_fleet(*, n_nodes: int, span_s: float, seed: int,
+                     gpus_per_node: int = 8, m_initial: int = 0,
+                     candidates: Sequence[Task] = (),
+                     n_arrivals: int = 0, n_finishes: int = 0,
+                     calib: FleetCalibration = DEFAULT_CALIBRATION,
+                     intensity: float = 1.0) -> ClusterScenario:
+    """The calibrated 30-day workload: per-category failures, slow
+    nodes, correlated bursts and preemption waves superimposed, all at
+    the committed rates (``intensity`` scales every rate uniformly for
+    stress/quick configurations; shares and ranges are untouched)."""
+    if intensity != 1.0:
+        calib = calib.scaled(intensity)
+    out = calibrated_failures(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 1,
+        gpus_per_node=gpus_per_node, calib=calib)
+    out = out.merged(calibrated_slow_nodes(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 2,
+        gpus_per_node=gpus_per_node, calib=calib))
+    out = out.merged(calibrated_bursts(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 3,
+        gpus_per_node=gpus_per_node, calib=calib))
+    out = out.merged(calibrated_preemption(
+        n_nodes=n_nodes, span_s=span_s, seed=seed * 10 + 4,
+        gpus_per_node=gpus_per_node, calib=calib))
+    if m_initial and len(candidates) and (n_arrivals or n_finishes):
+        out = out.merged(task_churn(
+            span_s=span_s, seed=seed * 10 + 5, n_nodes=n_nodes,
+            gpus_per_node=gpus_per_node, m_initial=m_initial,
+            candidates=candidates, n_arrivals=n_arrivals,
+            n_finishes=n_finishes))
+    out.name, out.seed = "calibrated_fleet", seed
+    return out
 
 
 # ---- control-plane chaos schedules (core.chaos) ---------------------------

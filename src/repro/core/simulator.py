@@ -17,6 +17,26 @@ Baselines are recovery *policies* with their published behaviours:
   unicron    everything in this repo: in-band detection, lookup-table
              plans over ALL tasks, partial-result reuse.
 
+Three modern recovery techniques (PAPERS.md: FFTrainer, GEMINI-style
+tiered checkpointing, replication-based continuation) are policy peers
+of the paper's five — the frontier ``benchmarks/bench_frontier.py``
+sweeps:
+
+  fftrainer          reserved hot-spare pool (``fftrainer_pool``): a
+                     spare substitutes for a failed node in seconds with
+                     state from the DP replica; the spares are capacity
+                     no task may use, so the trade-off is standing WAF
+                     for near-zero failover.  In-band detection.
+  hierarchical_ckpt  tiered restore (in-memory ring, demoted to the
+                     persistent store when a correlated burst also took
+                     the ring neighbor); affected-task reconfiguration,
+                     in-band detection, small standing efficiency tax
+                     for the per-iteration snapshots.
+  redundant          redundancy-based continuation: zero-cost
+                     transitions (survivors absorb the work instantly)
+                     paid for by the largest standing efficiency tax;
+                     failures still shrink capacity until repair.
+
 Inputs are either a plain failure trace (``core.traces``) or a
 :class:`~repro.core.scenarios.ClusterScenario`, which adds slow-node
 degradation (§4.1 statistical monitor), correlated/preemption failures,
@@ -67,8 +87,9 @@ import numpy as np
 from repro.core import costmodel, transition, waf as waf_mod
 from repro.core.cluster import Cluster
 from repro.core.coordinator import UnicronCoordinator
-from repro.core.detection import (ErrorKind, FleetMonitor, Severity,
-                                  classify, detection_time, detection_times)
+from repro.core.detection import (INBAND_POLICIES, ErrorKind, FleetMonitor,
+                                  Severity, classify, detection_time,
+                                  detection_times)
 from repro.core.handling import Trigger
 from repro.core.planner import PlannerCache
 from repro.core.scenarios import (ClusterScenario, DegradationEvent,
@@ -84,6 +105,9 @@ EFFICIENCY = {
     "oobleck": 0.38,
     "bamboo": 0.30,         # includes the redundant-computation tax
     "varuna": 0.29,
+    "fftrainer": 1.00,      # spare cost is modeled as reserved capacity
+    "hierarchical_ckpt": 0.98,   # per-iteration in-memory snapshots
+    "redundant": 0.90,      # standing replication tax
 }
 
 # Megatron's deployment keeps hot-spare nodes that substitute for failed
@@ -91,6 +115,32 @@ EFFICIENCY = {
 # available, at the cost of idling the spare.  Unicron instead re-plans
 # and uses every healthy node productively.
 HOT_SPARES = {"megatron": 1}
+
+
+def fftrainer_pool(n_nodes: int) -> int:
+    """Reserved hot-spare pool size for the fftrainer policy: one spare
+    per 16 nodes (at least one), never the whole fleet.  Unlike
+    megatron's off-book spare, these are nodes the planner can never
+    assign — the standing WAF cost of the near-zero failover."""
+    if n_nodes <= 1:
+        return 0
+    return min(max(1, n_nodes // 16), n_nodes - 1)
+
+
+def fit_assignment(assignment: List[int], capacity: int,
+                   gpn: int) -> List[int]:
+    """Trim an assignment to ``capacity`` workers by repeatedly shaving
+    one node's worth off the largest task (deterministic: first max
+    wins) — how the fftrainer lanes fund their reserved spares."""
+    w = list(assignment)
+    total = sum(w)
+    while total > capacity:
+        i = max(range(len(w)), key=lambda j: w[j])
+        if w[i] < gpn:
+            break
+        w[i] -= gpn
+        total -= gpn
+    return w
 
 Trace = Union[List[FailureEvent], ClusterScenario]
 
@@ -413,6 +463,13 @@ class TraceSimulator:
         self._waf_curves: Dict[Task, object] = {}
         self.cluster = Cluster(n_nodes, gpus_per_node)
         self.gpn = gpus_per_node
+        if policy == "fftrainer":
+            # the reserved spare pool is funded up front: the initial
+            # assignment is trimmed to the capacity that remains
+            pool = fftrainer_pool(n_nodes)
+            assignment = fit_assignment(
+                list(assignment), (n_nodes - pool) * gpus_per_node,
+                gpus_per_node)
         self.tasks = [SimTask(task=t, workers=x)
                       for t, x in zip(tasks, assignment)]
         # §4.1 statistical monitor: one primed ring-buffer row per task
@@ -429,7 +486,8 @@ class TraceSimulator:
                 plan_engine=plan_engine)
         # coordinator entry index per simulator slot (diverges under churn)
         self._ci: List[Optional[int]] = list(range(len(self.tasks)))
-        self.spares = HOT_SPARES.get(policy, 0)
+        self.spares = (fftrainer_pool(n_nodes) if policy == "fftrainer"
+                       else HOT_SPARES.get(policy, 0))
         self.n_reconfigs = 0
         self.downtime = 0.0
         self.n_degraded_drains = 0
@@ -474,11 +532,12 @@ class TraceSimulator:
     # ---- policy behaviours -------------------------------------------------
 
     def _detect_s(self, kind: ErrorKind, avg_iter: float) -> float:
-        unicron = self.policy == "unicron" and not self.ablate_detection
+        unicron = (self.policy in INBAND_POLICIES
+                   and not self.ablate_detection)
         return detection_time(kind, avg_iter, unicron=unicron)
 
     def _transition_s(self, st: SimTask, detect_s: float,
-                      sev: Severity) -> float:
+                      sev: Severity, replica_lost: bool = False) -> float:
         state_bytes = waf_mod.state_bytes(st.task)
         if self.policy == "unicron" and self.ablate_transition:
             c = transition.estimate_baseline(
@@ -489,8 +548,18 @@ class TraceSimulator:
             dp = max(st.workers // 8, 1)
             c = transition.estimate_unicron(
                 state_bytes, st.avg_iter_s, dp_degree=dp, detect_s=detect_s,
-                lookup_hit=True)
+                lookup_hit=True, replica_lost=replica_lost)
             return c.total
+        if self.policy == "fftrainer":
+            return transition.estimate_fftrainer(
+                state_bytes, st.avg_iter_s, detect_s).total
+        if self.policy == "hierarchical_ckpt":
+            return transition.estimate_hierarchical(
+                state_bytes, st.avg_iter_s, detect_s,
+                replica_lost=replica_lost).total
+        if self.policy == "redundant":
+            # continuation: survivors absorb the work with zero stoppage
+            return transition.estimate_redundant().total
         if self.policy in ("megatron", "varuna"):
             c = transition.estimate_baseline(
                 state_bytes, detect_s, dynamic_reconfig=False,
@@ -508,6 +577,14 @@ class TraceSimulator:
         return (self.policy == "unicron" and self.coord is not None
                 and not self.ablate_replan)
 
+    def _avail_workers(self) -> int:
+        """Workers the policy may assign: healthy capacity minus the
+        fftrainer spare pool (reserved nodes no task can use)."""
+        avail = self.cluster.healthy_workers()
+        if self.policy == "fftrainer":
+            avail -= self.spares * self.gpn
+        return avail
+
     def _apply_unicron_plan(self) -> None:
         """Sync slot worker counts from the coordinator's entries."""
         for slot, ci in enumerate(self._ci):
@@ -516,7 +593,7 @@ class TraceSimulator:
 
     def _reconfigure(self, now: float, faulted_task: Optional[int]) -> None:
         """Node-count change: redistribute workers."""
-        n_avail = self.cluster.healthy_workers()
+        n_avail = self._avail_workers()
         self.n_reconfigs += 1
         if self._use_planner():
             ft = self._ci[faulted_task] if faulted_task is not None else None
@@ -535,7 +612,7 @@ class TraceSimulator:
         self.cluster.assign([t.workers for t in self.tasks])
 
     def _node_rejoin(self, now: float) -> None:
-        n_avail = self.cluster.healthy_workers()
+        n_avail = self._avail_workers()
         self.n_reconfigs += 1
         if self._use_planner():
             self.coord.reconfigure(n_avail, None,
@@ -666,8 +743,30 @@ class TraceSimulator:
             return
         st = self.tasks[owner]
         detect = self._detect_s(ev.kind, st.avg_iter_s)
-        trans = self._transition_s(st, detect, sev)
+        # replica loss (SEV1 only): a correlated burst already took the
+        # failed node's in-memory ring neighbor, so tier-aware restores
+        # (unicron at dp==1, hierarchical_ckpt) demote to persistent
+        replica_lost = False
         if sev is Severity.SEV1:
+            nb = (node + 1) % len(self.cluster.nodes)
+            replica_lost = not self.cluster.nodes[nb].healthy
+        trans = self._transition_s(st, detect, sev,
+                                   replica_lost=replica_lost)
+        if sev is Severity.SEV1:
+            if self.policy == "fftrainer":
+                # the node is really lost, but a reserved spare (if any)
+                # substitutes: capacity is constant (healthy-1, pool-1)
+                # and the task keeps its workers; with the pool dry the
+                # affected task shrinks like any baseline
+                self.cluster.fail_node(node, now + (ev.repair_s or 0.0))
+                if self.spares > 0:
+                    self.spares -= 1
+                    self.cluster.assign([t.workers for t in self.tasks])
+                else:
+                    self._reconfigure(now, owner)
+                st.blocked_until = max(st.blocked_until, now + trans)
+                self.downtime += trans
+                return
             if self.spares > 0:
                 # hot spare substitutes: capacity preserved, transition
                 # (restart-from-checkpoint onto the spare) still paid
@@ -686,6 +785,17 @@ class TraceSimulator:
 
     def _on_repair(self, now: float, ev: FailureEvent) -> None:
         node = ev.node % len(self.cluster.nodes)
+        if self.policy == "fftrainer":
+            # the node really failed (unlike megatron's off-book spare):
+            # recover it, then either refill the pool (capacity constant
+            # again) or fund the down-scaled task's restore
+            self.cluster.recover_node(node)
+            if not any(st.affected_first for st in self.tasks):
+                self.spares += 1
+                self.cluster.assign([t.workers for t in self.tasks])
+            else:
+                self._node_rejoin(now)
+            return
         if HOT_SPARES.get(self.policy, 0) and not any(
                 st.affected_first for st in self.tasks):
             # no task was down-scaled: the repaired node refills
@@ -745,7 +855,7 @@ class TraceSimulator:
             # at the task's worker ceiling (workers past it would idle)
             self._ci.append(None)
             assigned = sum(t.workers for t in self.tasks)
-            free = max(self.cluster.healthy_workers() - assigned, 0)
+            free = max(self._avail_workers() - assigned, 0)
             grant = min(ev.workers_hint, free)
             if ev.task.max_workers is not None:
                 grant = min(grant, ev.task.max_workers)
@@ -928,8 +1038,19 @@ class BatchSimulator:
                                       for p in self.policies])
         self._ckpt_lane = np.array(
             [p in transition.CKPT_RESTART_POLICIES for p in self.policies])
+        self._fft_lane = np.array([p == "fftrainer"
+                                   for p in self.policies])
+        self._fft_set = {p for p, pol in enumerate(self.policies)
+                         if pol == "fftrainer"}
+        self._hier_lane = np.array([p == "hierarchical_ckpt"
+                                    for p in self.policies])
+        self._hier_idx = [p for p, pol in enumerate(self.policies)
+                          if pol == "hierarchical_ckpt"]
+        self._red_lane = np.array([p == "redundant"
+                                   for p in self.policies])
         self._has_spares = [p in HOT_SPARES for p in self.policies]
-        self._spares = [HOT_SPARES.get(p, 0) for p in self.policies]
+        self._spares = [fftrainer_pool(n_nodes) if p == "fftrainer"
+                        else HOT_SPARES.get(p, 0) for p in self.policies]
         self._tasks: List[Task] = list(tasks)
         M = len(self._tasks)
         self._avg = np.full(M, 30.0)              # SimTask.avg_iter_s
@@ -937,6 +1058,12 @@ class BatchSimulator:
                                  for t in self._tasks])
         self._workers = np.tile(np.asarray(assignment, dtype=np.int64),
                                 (P, 1))
+        for p in self._fft_set:
+            # fftrainer lanes fund their reserved spare pool up front
+            self._workers[p] = fit_assignment(
+                list(assignment),
+                (n_nodes - self._spares[p]) * gpus_per_node,
+                gpus_per_node)
         self._blocked = [[0.0] * M for _ in range(P)]
         self._active = np.ones(M, dtype=bool)
         self._affected = np.zeros((P, M), dtype=bool)
@@ -969,7 +1096,7 @@ class BatchSimulator:
         self._n_healthy = [n_nodes] * P          # healthy-node counters
         self._healthy_ids: List[Optional[np.ndarray]] = [None] * P
         self._cums: List[Optional[np.ndarray]] = [None] * P
-        self._assigned = [int(sum(assignment))] * P
+        self._assigned = [int(self._workers[p].sum()) for p in range(P)]
         self._aff_count = [0] * P
         self._reconfigs = [0] * P
         self._kind_T: Dict[ErrorKind, np.ndarray] = {}
@@ -992,6 +1119,14 @@ class BatchSimulator:
 
     def _healthy_workers(self, p: int) -> int:
         return self._n_healthy[p] * self.gpn
+
+    def _avail_lane(self, p: int) -> int:
+        """Assignable capacity: healthy workers minus the lane's
+        reserved fftrainer spare pool (scalar ``_avail_workers``)."""
+        avail = self._n_healthy[p] * self.gpn
+        if p in self._fft_set:
+            avail -= self._spares[p] * self.gpn
+        return avail
 
     def _fail_node(self, p: int, node: int) -> None:
         if self._health[p, node]:
@@ -1051,7 +1186,7 @@ class BatchSimulator:
         self._mutated = True
 
     def _reconfigure_lane(self, p: int, faulted: Optional[int]) -> None:
-        n_avail = self._n_healthy[p] * self.gpn
+        n_avail = self._avail_lane(p)
         self._reconfigs[p] += 1
         if p in self._coords:
             ft = self._cis[p][faulted] if faulted is not None else None
@@ -1072,7 +1207,7 @@ class BatchSimulator:
                 self._aff_count[p] += 1
 
     def _rejoin_lane(self, p: int) -> None:
-        n_avail = self._n_healthy[p] * self.gpn
+        n_avail = self._avail_lane(p)
         self._reconfigs[p] += 1
         if p in self._coords:
             self._coords[p].reconfigure(n_avail, None,
@@ -1095,9 +1230,11 @@ class BatchSimulator:
         """(policy, task) transition-total matrix for one error kind,
         built lazily from one ``estimate_batch`` call per recovery class
         over the task axis (policies of one class share every formula
-        input except the owner task) and cached per (kind, task) in the
-        shared model cache, so churn only computes the admitted task's
-        column.  Planner-lane rows are placeholders — their totals depend
+        input except the owner task) and cached per (kind, task,
+        avg_iter_s) in the shared model cache — the iteration time is in
+        the key because the same task may be re-admitted with a
+        different hint, and the in-band rows scale with it — so churn
+        only computes the admitted task's column.  Planner-lane rows are placeholders — their totals depend
         on the live DP degree and are overwritten per event by
         ``_trans_row``."""
         T = self._kind_T.get(kind)
@@ -1105,51 +1242,86 @@ class BatchSimulator:
             M = len(self._tasks)
             cache = self._class_cache
             missing = [i for i in range(M)
-                       if (kind, self._tids[i]) not in cache]
+                       if (kind, self._tids[i], float(self._avg[i]))
+                       not in cache]
             if missing:
+                k = len(missing)
                 sb = self._sbytes[missing]
                 avg = self._avg[missing]
                 det = detection_times([kind], avg,
-                                      np.zeros(len(missing), dtype=bool))[0]
+                                      np.zeros(k, dtype=bool))[0]
+                det_in = detection_times([kind], avg,
+                                         np.ones(k, dtype=bool))[0]
                 ckpt = transition.batch_total(transition.estimate_batch(
-                    ["megatron"] * len(missing), sb, avg, 1, det))
+                    ["megatron"] * k, sb, avg, 1, det))
                 dyn = transition.batch_total(transition.estimate_batch(
-                    ["oobleck"] * len(missing), sb, avg, 1, det))
+                    ["oobleck"] * k, sb, avg, 1, det))
+                fft = transition.batch_total(transition.estimate_batch(
+                    ["fftrainer"] * k, sb, avg, 1, det_in))
+                hier = transition.batch_total(transition.estimate_batch(
+                    ["hierarchical_ckpt"] * k, sb, avg, 1, det_in))
+                hier_l = transition.batch_total(transition.estimate_batch(
+                    ["hierarchical_ckpt"] * k, sb, avg, 1, det_in,
+                    replica_lost=True))
                 for j, i in enumerate(missing):
-                    cache[(kind, self._tids[i])] = (float(ckpt[j]),
-                                                    float(dyn[j]))
-            vals = [cache[(kind, tid)] for tid in self._tids]
+                    cache[(kind, self._tids[i], float(avg[j]))] = (
+                        float(ckpt[j]), float(dyn[j]), float(fft[j]),
+                        float(hier[j]), float(hier_l[j]))
+            vals = [cache[(kind, tid, float(a))]
+                    for tid, a in zip(self._tids, self._avg)]
             ckpt_v = np.array([v[0] for v in vals])
             dyn_v = np.array([v[1] for v in vals])
+            fft_v = np.array([v[2] for v in vals])
+            hier_v = np.array([v[3] for v in vals])
             if classify(kind)[1] is not Severity.SEV1:
                 # bamboo's redundancy rides through SEV2/3 failures
                 dyn_bam = np.zeros(M)
             else:
                 dyn_bam = dyn_v
-            T = np.where(self._ckpt_lane[:, None], ckpt_v[None, :],
-                         np.where(self._bamboo_lane[:, None],
-                                  dyn_bam[None, :], dyn_v[None, :]))
+            # hierarchical rows bake replica_lost=False; ``_trans_row``
+            # overrides a lane from the cache's tier-demoted totals when
+            # the event really took the ring neighbor too.  redundant
+            # rows are identically zero (continuation).
+            T = np.where(
+                self._ckpt_lane[:, None], ckpt_v[None, :],
+                np.where(self._bamboo_lane[:, None], dyn_bam[None, :],
+                         np.where(self._fft_lane[:, None], fft_v[None, :],
+                                  np.where(self._hier_lane[:, None],
+                                           hier_v[None, :],
+                                           np.where(self._red_lane[:, None],
+                                                    0.0,
+                                                    dyn_v[None, :])))))
             self._kind_T[kind] = T
         return T
 
-    def _trans_row(self, kind: ErrorKind,
-                   owners: List[int]) -> List[float]:
+    def _trans_row(self, kind: ErrorKind, owners: List[int],
+                   rl: Optional[np.ndarray] = None) -> List[float]:
         """Detection + transition totals per policy: one gather out of the
         per-kind (policy, task) class matrix, with planner lanes filled
-        from a (kind, owner, dp)-memoized ``estimate_batch`` row — state
-        sizes and iteration times are fixed per task, so those keys pin
-        every input of the scalar formulas."""
+        from a (kind, owner, dp, replica_lost)-memoized
+        ``estimate_unicron`` total — state sizes and iteration times are
+        fixed per task, so those keys pin every input of the scalar
+        formulas.  ``rl`` is the per-lane replica-loss vector (SEV1
+        events only): hierarchical lanes swap to the cache's
+        tier-demoted totals, planner lanes carry it into the key."""
         T = self._class_matrix(kind)
         tot = [T[p, o if o >= 0 else 0] for p, o in enumerate(owners)]
+        if rl is not None:
+            for p in self._hier_idx:
+                if rl[p]:
+                    o = owners[p] if owners[p] >= 0 else 0
+                    tot[p] = self._class_cache[
+                        (kind, self._tids[o], float(self._avg[o]))][4]
         for p in self._planner_idx:
             o = owners[p]
             if o < 0:
                 o = 0
             dp = int(self._workers[p, o]) // 8
+            rl_p = bool(rl[p]) if rl is not None else False
             # the key carries the slot's iteration time too: the same Task
             # may be admitted with different avg_iter_s hints, and both
             # detection and recompute scale with it
-            ukey = (kind, self._tids[o], dp, float(self._avg[o]))
+            ukey = (kind, self._tids[o], dp, float(self._avg[o]), rl_p)
             val = self._uni_cache.get(ukey)
             if val is None:
                 det = detection_time(kind, float(self._avg[o]),
@@ -1157,7 +1329,7 @@ class BatchSimulator:
                 val = transition.estimate_unicron(
                     float(self._sbytes[o]), float(self._avg[o]),
                     dp_degree=max(dp, 1), detect_s=det,
-                    lookup_hit=True).total
+                    lookup_hit=True, replica_lost=rl_p).total
                 self._uni_cache[ukey] = val
             tot[p] = val
         return tot
@@ -1199,13 +1371,28 @@ class BatchSimulator:
                      if mask[p] and owners[p] >= 0]
         if not valid:
             return
-        trans = self._trans_row(ev.kind, owners)
+        rl = None
+        if ev.severity is Severity.SEV1:
+            # replica loss per lane: the in-memory ring neighbor of the
+            # failed node is already unhealthy (read BEFORE this event's
+            # fail lands, matching the scalar reference)
+            nb = (node + 1) % self.n_nodes
+            rl = ~self._health[:, nb]
+        trans = self._trans_row(ev.kind, owners, rl)
         if ev.severity is Severity.SEV1:
             # hot spare substitutes: capacity preserved, transition still
-            # paid; everyone else drains the node and replans
+            # paid; everyone else drains the node and replans.  fftrainer
+            # really loses the node and burns a reserved spare (healthy-1,
+            # pool-1: assignable capacity constant) until the pool is dry
             spares = self._spares
             for p in valid:
-                if spares[p] > 0:
+                if p in self._fft_set:
+                    self._fail_node(p, node)
+                    if spares[p] > 0:
+                        spares[p] -= 1
+                    else:
+                        self._reconfigure_lane(p, owners[p])
+                elif spares[p] > 0:
                     spares[p] -= 1
                 else:
                     self._fail_node(p, node)
@@ -1218,6 +1405,15 @@ class BatchSimulator:
         lanes = (self._all_list if mask is self._all_lanes
                  else np.flatnonzero(mask).tolist())
         for p in lanes:
+            if p in self._fft_set:
+                # the node really failed: recover it, then refill the
+                # pool (capacity constant) or fund the affected task
+                self._recover_node(p, node)
+                if not self._aff_count[p]:
+                    self._spares[p] += 1
+                else:
+                    self._rejoin_lane(p)
+                continue
             if self._has_spares[p] and not self._aff_count[p]:
                 # no task was down-scaled: the repaired node refills
                 # the spare pool instead of joining a task
@@ -1307,10 +1503,9 @@ class BatchSimulator:
         if blane_list:
             # baselines: grant from the free pool, node-granular, capped
             assigned = np.array([self._assigned[p] for p in blane_list])
-            healthy = np.array([self._n_healthy[p]
-                                for p in blane_list]) * self.gpn
+            avail = np.array([self._avail_lane(p) for p in blane_list])
             grant = np.minimum(ev.workers_hint,
-                               np.maximum(healthy - assigned, 0))
+                               np.maximum(avail - assigned, 0))
             if ev.task.max_workers is not None:
                 grant = np.minimum(grant, ev.task.max_workers)
             grant -= grant % self.gpn

@@ -61,7 +61,8 @@ def main() -> None:
     state = init_train_state(model, opt, jax.random.PRNGKey(0))
     data = SyntheticLM(cfg, seq_len=args.seq, global_batch=args.batch)
     mgr = CheckpointManager(args.ckpt_dir, n_ranks=args.dp,
-                            persist_every=args.ckpt_every)
+                            persist_every=args.ckpt_every,
+                            task=f"train-{cfg.name}")
     kv = KVStore()
     agent = UnicronAgent(node_id=0, kv=kv)
 

@@ -206,6 +206,13 @@ def test_estimate_batch_matches_scalar_estimates():
             if p == "unicron":
                 ref = transition.estimate_unicron(sb, avg, dp_degree=dp,
                                                   detect_s=det)
+            elif p in transition.FFTRAINER_POLICIES:
+                ref = transition.estimate_fftrainer(sb, avg, detect_s=det)
+            elif p in transition.HIERARCHICAL_POLICIES:
+                ref = transition.estimate_hierarchical(sb, avg,
+                                                       detect_s=det)
+            elif p in transition.REDUNDANT_POLICIES:
+                ref = transition.estimate_redundant()
             elif p in transition.CKPT_RESTART_POLICIES:
                 ref = transition.estimate_baseline(
                     sb, det, dynamic_reconfig=False, ckpt_restart=True)

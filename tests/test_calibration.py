@@ -1,0 +1,217 @@
+"""Statistical tests for the calibrated scenario family (ISSUE 10).
+
+The committed parameter tables in ``core/calibration.py`` are the
+single source of truth; these tests assert the generated event streams
+actually reproduce them: Poisson event counts, per-category shares,
+exponential inter-arrival times (KS), 1/n MTTF scaling, repair-time
+ranges, and the documented MTTF anchor.  All bounds are +-5 sigma on
+seeded draws, so the tests are deterministic, not flaky.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import scenarios as sc
+from repro.core.calibration import (CATEGORIES, DAY, DEFAULT_CALIBRATION,
+                                    FleetCalibration)
+from repro.core.detection import Severity, classify
+
+CAL = DEFAULT_CALIBRATION
+KIND_TO_CAT = {k: c for c in CATEGORIES for k in c.kinds}
+
+
+def _sig(scn):
+    return ([(e.time, e.node, e.kind, e.repair_s) for e in scn.failures],
+            [(e.time, e.node, e.slowdown, e.duration_s)
+             for e in scn.degradations])
+
+
+# ---------------------------------------------------------------------------
+# parameter table itself
+# ---------------------------------------------------------------------------
+
+
+def test_category_shares_form_distribution():
+    shares = CAL.category_shares()
+    assert abs(sum(shares.values()) - 1.0) < 1e-12
+    assert all(s > 0 for s in shares.values())
+    # kinds partition cleanly: no kind claimed by two categories
+    kinds = [k for c in CATEGORIES for k in c.kinds]
+    assert len(kinds) == len(set(kinds))
+
+
+def test_mttf_anchor_matches_meta_study():
+    """Meta (arXiv 2410.21680): ~7.9 h job MTTF at 1024 GPUs/128 nodes."""
+    assert CAL.mttf_s(128) / 3600.0 == pytest.approx(7.9, abs=0.1)
+    # and the superposition identity rate * mttf == 1
+    assert CAL.failure_rate_s(128) * CAL.mttf_s(128) == pytest.approx(1.0)
+
+
+def test_sev1_share_is_infrastructure_fraction():
+    """Acme (arXiv 2403.07648): ~30% of failures are node-fatal infra."""
+    assert CAL.sev1_share() == pytest.approx(0.31, abs=1e-12)
+    for c in CATEGORIES:
+        if c.repair_range_s is not None:
+            lo, hi = c.repair_range_s
+            assert 0 < lo < hi
+
+
+def test_scaled_multiplies_every_rate():
+    s = CAL.scaled(3.0)
+    assert s.failure_rate_s(16) == pytest.approx(3.0 * CAL.failure_rate_s(16))
+    assert s.slow_rate_per_node_s == pytest.approx(
+        3.0 * CAL.slow_rate_per_node_s)
+    assert s.burst_rate_per_node_s == pytest.approx(
+        3.0 * CAL.burst_rate_per_node_s)
+    assert s.preempt_wave_rate_s == pytest.approx(
+        3.0 * CAL.preempt_wave_rate_s)
+    # shares and ranges untouched
+    assert s.categories is CAL.categories
+    assert s.slow_slowdown_range == CAL.slow_slowdown_range
+
+
+# ---------------------------------------------------------------------------
+# generated streams vs the table
+# ---------------------------------------------------------------------------
+
+
+def test_calibrated_generators_deterministic():
+    a = sc.calibrated_fleet(n_nodes=32, span_s=30 * DAY, seed=11)
+    b = sc.calibrated_fleet(n_nodes=32, span_s=30 * DAY, seed=11)
+    c = sc.calibrated_fleet(n_nodes=32, span_s=30 * DAY, seed=12)
+    assert _sig(a) == _sig(b)
+    assert _sig(a) != _sig(c)
+    assert a.name == "calibrated_fleet"
+
+
+def test_failure_count_is_poisson_at_calibrated_rate():
+    n, span = 64, 360 * DAY
+    scn = sc.calibrated_failures(n_nodes=n, span_s=span, seed=5)
+    expected = CAL.failure_rate_s(n) * span
+    sigma = math.sqrt(expected)
+    assert abs(len(scn.failures) - expected) < 5 * sigma
+
+
+def test_category_shares_within_binomial_bounds():
+    n, span = 64, 360 * DAY
+    scn = sc.calibrated_failures(n_nodes=n, span_s=span, seed=5)
+    N = len(scn.failures)
+    counts = {c.name: 0 for c in CATEGORIES}
+    for e in scn.failures:
+        counts[KIND_TO_CAT[e.kind].name] += 1
+    for c in CATEGORIES:
+        sigma = math.sqrt(N * c.share * (1 - c.share))
+        assert abs(counts[c.name] - N * c.share) < 5 * sigma, c.name
+    # node-fatal events (and only those) carry a repair time, and it
+    # stays inside the category's calibrated range
+    sev1 = 0
+    for e in scn.failures:
+        cat = KIND_TO_CAT[e.kind]
+        if cat.repair_range_s is None:
+            assert e.repair_s is None
+        else:
+            sev1 += 1
+            lo, hi = cat.repair_range_s
+            assert lo <= e.repair_s <= hi
+            assert classify(e.kind)[1] is Severity.SEV1
+    p = CAL.sev1_share()
+    assert abs(sev1 - N * p) < 5 * math.sqrt(N * p * (1 - p))
+
+
+def test_interarrivals_are_exponential_ks():
+    """One-sample KS against Exp(lambda): D * sqrt(N) < 2.0 (the 5%
+    critical value is ~1.36; 2.0 keeps the seeded draw deterministic)."""
+    n, span = 64, 360 * DAY
+    scn = sc.calibrated_failures(n_nodes=n, span_s=span, seed=5)
+    t = np.array([e.time for e in scn.failures])
+    gaps = np.diff(np.sort(t))
+    lam = CAL.failure_rate_s(n)
+    u = np.sort(1.0 - np.exp(-lam * gaps))
+    k = u.size
+    grid = np.arange(1, k + 1) / k
+    d = np.max(np.maximum(grid - u, u - (grid - 1.0 / k)))
+    assert d * math.sqrt(k) < 2.0
+
+
+def test_mttf_scales_inversely_with_fleet_size():
+    """Doubling nodes doubles the fleet event rate: the n=256 count over
+    the same span is ~4x the n=64 count (Poisson superposition)."""
+    span = 360 * DAY
+    n64 = len(sc.calibrated_failures(n_nodes=64, span_s=span,
+                                     seed=9).failures)
+    n256 = len(sc.calibrated_failures(n_nodes=256, span_s=span,
+                                      seed=10).failures)
+    expect64 = CAL.failure_rate_s(64) * span
+    expect256 = CAL.failure_rate_s(256) * span
+    assert expect256 / expect64 == pytest.approx(4.0)
+    ratio_sigma = 4.0 * (1 / math.sqrt(expect64) + 1 / math.sqrt(expect256))
+    assert abs(n256 / n64 - 4.0) < 5 * ratio_sigma
+
+
+def test_slow_nodes_sit_inside_monitor_band():
+    """Calibrated stragglers must be catchable: above the 1.1x
+    degradation margin, below the 3x failure threshold (paper Fig. 6)."""
+    scn = sc.calibrated_slow_nodes(n_nodes=64, span_s=720 * DAY, seed=3)
+    assert scn.degradations
+    lo, hi = CAL.slow_slowdown_range
+    dlo, dhi = CAL.slow_duration_range_s
+    for e in scn.degradations:
+        assert 1.1 < lo <= e.slowdown <= hi < 3.0
+        assert dlo <= e.duration_s <= dhi
+    expected = 64 * CAL.slow_rate_per_node_s * 720 * DAY
+    assert abs(len(scn.degradations) - expected) < 5 * math.sqrt(expected)
+
+
+def test_bursts_take_ring_neighbors_together():
+    """Correlated bursts hit contiguous groups, so some failed node's
+    ring neighbor (node+1) is down in the same two-minute window — the
+    replica-loss case the tier-aware restore model charges."""
+    scn = sc.calibrated_bursts(n_nodes=64, span_s=3600 * DAY, seed=2)
+    assert scn.failures
+    by_node = {}
+    pairs = 0
+    for e in scn.failures:
+        by_node.setdefault(e.node, []).append(e)
+        assert e.repair_s is not None and e.repair_s >= 60.0
+    for e in scn.failures:
+        for nb in by_node.get((e.node + 1) % 64, ()):
+            if abs(nb.time - e.time) <= 120.0:
+                pairs += 1
+    assert pairs > 0
+
+
+def test_preemption_waves_reclaim_calibrated_fraction():
+    scn = sc.calibrated_preemption(n_nodes=64, span_s=3600 * DAY, seed=4)
+    assert scn.failures
+    # cluster waves by onset (30 s reclaim skew)
+    times = np.array([e.time for e in scn.failures])
+    order = np.argsort(times)
+    waves = []
+    cur = [order[0]]
+    for i in order[1:]:
+        if times[i] - times[cur[-1]] <= 30.0:
+            cur.append(i)
+        else:
+            waves.append(cur)
+            cur = [i]
+    waves.append(cur)
+    lo, hi = CAL.preempt_fraction_range
+    for w in waves:
+        assert lo * 64 - 1 <= len(w) <= hi * 64 + 1
+    expected = CAL.preempt_wave_rate_s * 3600 * DAY
+    assert abs(len(waves) - expected) < 5 * math.sqrt(expected)
+
+
+def test_fleet_intensity_scales_counts():
+    base = sc.calibrated_fleet(n_nodes=64, span_s=90 * DAY, seed=6)
+    hot = sc.calibrated_fleet(n_nodes=64, span_s=90 * DAY, seed=6,
+                              intensity=8.0)
+    nb, nh = len(base.failures), len(hot.failures)
+    assert nh > 4 * nb          # ~8x in expectation
+    # custom calibration flows through end to end
+    slow = FleetCalibration(node_mtbf_s=1.0 * DAY)
+    fast = sc.calibrated_failures(n_nodes=64, span_s=90 * DAY, seed=6,
+                                  calib=slow)
+    expected = slow.failure_rate_s(64) * 90 * DAY
+    assert abs(len(fast.failures) - expected) < 5 * math.sqrt(expected)

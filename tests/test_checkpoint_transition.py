@@ -30,6 +30,36 @@ def test_persistent_roundtrip(tmp_path, state):
     _close(got, state)
 
 
+def test_latest_step_survives_torn_marker_and_tmp_leftovers(tmp_path,
+                                                           state):
+    """A crash between archive write and marker write (or mid-marker)
+    must not lose the newest complete checkpoint (ISSUE 10 satellite)."""
+    d = str(tmp_path)
+    assert persistent.latest_step(d) is None          # empty directory
+    persistent.save(d, 3, state)
+    persistent.save(d, 12, state)
+
+    # torn marker: empty file
+    (tmp_path / "latest").write_text("")
+    assert persistent.latest_step(d) == 12
+    # torn marker: garbage bytes
+    (tmp_path / "latest").write_text("12\x0034garbage")
+    assert persistent.latest_step(d) == 12
+    # marker points at a step whose archive never landed
+    (tmp_path / "latest").write_text("99")
+    assert persistent.latest_step(d) == 12
+    # marker deleted entirely
+    (tmp_path / "latest").unlink()
+    assert persistent.latest_step(d) == 12
+
+    # stray in-flight tmp archive from a dead writer is not a candidate
+    (tmp_path / "ckpt_00000050.npz.tmp.npz").write_bytes(b"partial")
+    (tmp_path / "ckpt_garbage.npz").write_bytes(b"junk")
+    assert persistent.latest_step(d) == 12
+    got = persistent.restore(d, state)
+    _close(got, state)
+
+
 def test_inmemory_ring_replication(state):
     store = InMemoryStore(n_ranks=4)
     store.put("t", 1, step=5, tree=state)
@@ -44,8 +74,12 @@ def test_inmemory_ring_replication(state):
 
 def test_nearest_principle_ordering(tmp_path, state):
     """DP replica beats in-memory beats persistent."""
-    mgr = CheckpointManager(str(tmp_path), n_ranks=4, persist_every=1)
+    mgr = CheckpointManager(str(tmp_path), n_ranks=4, persist_every=1,
+                            task="gpt-7b")
     mgr.save(rank=0, step=3, state=state)
+    # keyed by the real task id, not a hardcoded constant
+    assert mgr.store.get("gpt-7b", 0) is not None
+    assert mgr.store.get("task", 0) is None
 
     peer = jax.tree.map(lambda x: x + 1, state)
     got, step, src = mgr.restore(0, state, dp_peer_state=peer, peer_step=4)
@@ -55,15 +89,15 @@ def test_nearest_principle_ordering(tmp_path, state):
     got, step, src = mgr.restore(0, state)
     assert src == "inmemory_local" and step == 3
 
-    mgr.store.drop_rank("task", 0)
-    mgr.store.drop_rank("task", mgr.store.neighbor(0))
+    mgr.store.drop_rank(mgr.task, 0)
+    mgr.store.drop_rank(mgr.task, mgr.store.neighbor(0))
     got, step, src = mgr.restore(0, state)
     assert src == "persistent" and step == 3
     _close(got, state)
 
 
 def test_restore_without_any_source(tmp_path, state):
-    mgr = CheckpointManager(str(tmp_path), n_ranks=2)
+    mgr = CheckpointManager(str(tmp_path), n_ranks=2, task="empty")
     with pytest.raises(FileNotFoundError):
         mgr.restore(0, state)
 

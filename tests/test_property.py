@@ -438,3 +438,39 @@ def test_batched_engine_matches_vector_on_random_subsets(data):
             want[policy].per_seed, rel=1e-9), policy
         assert got[policy].n_reconfigs == want[policy].n_reconfigs
         assert got[policy].downtime_s == want[policy].downtime_s
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_new_policies_batched_waf_matches_scalar_on_calibrated(data):
+    """The three new recovery policies (fftrainer / hierarchical_ckpt /
+    redundant) through the batched engine reproduce the scalar
+    TraceSimulator's WAF and downtime on calibrated traces, including
+    replica-loss bursts (ISSUE 10: new policies are engine-equivalence
+    peers of the paper's five)."""
+    from benchmarks.common import case5_tasks
+    from repro.core import scenarios as sc
+    from repro.core.simulator import BatchSimulator, TraceSimulator
+    from repro.core.traces import DAY
+
+    tasks, assignment = case5_tasks()
+    policies = data.draw(st.lists(
+        st.sampled_from(["fftrainer", "hierarchical_ckpt", "redundant"]),
+        min_size=1, max_size=3, unique=True))
+    seed = data.draw(st.integers(0, 40))
+    intensity = data.draw(st.sampled_from([4.0, 12.0]))
+    scen = sc.calibrated_fleet(n_nodes=16, span_s=7 * DAY, seed=seed,
+                               m_initial=len(tasks), intensity=intensity)
+
+    bat = BatchSimulator(tasks, list(assignment), list(policies),
+                         n_nodes=16)
+    got = bat.run(scen)
+    import pytest
+    for policy in policies:
+        ref = TraceSimulator(tasks, list(assignment), policy,
+                             n_nodes=16).run(scen)
+        assert got[policy].accumulated_waf == pytest.approx(
+            ref.accumulated_waf, rel=1e-9, abs=1e-12), policy
+        assert got[policy].downtime_s == pytest.approx(
+            ref.downtime_s, rel=1e-9, abs=1e-9), policy
+        assert got[policy].n_reconfigs == ref.n_reconfigs, policy
